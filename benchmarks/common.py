@@ -1,0 +1,112 @@
+"""Shared benchmark harness.
+
+Quality experiments run at proxy scale: a small Llama-family model trained on
+the seeded synthetic corpus until it clearly beats the unigram floor, then
+compressed with each method. We report the *PPL proxy* exp(eval loss) and
+validate the paper's orderings/trends (not absolute Wikitext2 numbers —
+documented in EXPERIMENTS.md §Repro).
+
+The trained model + eval batches are cached on disk so every benchmark module
+(and re-runs) reuse them.
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticConfig, sample_batch
+from repro.models import build
+
+CACHE = os.path.join(os.path.dirname(__file__), ".cache")
+
+
+def proxy_config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="llama-proxy", family="dense",
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4,
+        d_ff=352, vocab_size=512, dtype="float32", remat="none",
+        max_seq_len=256,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def data_config(cfg: ModelConfig, seq: int = 64, batch: int = 16) -> SyntheticConfig:
+    return SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                           global_batch=batch, seed=0)
+
+
+def _to_jnp(b):
+    return {k: jnp.asarray(v) for k, v in b.items()}
+
+
+def train_proxy_model(cfg: ModelConfig | None = None, *, steps: int = 400,
+                      lr: float = 1e-3, tag: str = "default"):
+    """Train (or load cached) proxy model. Returns (cfg, params, final_loss)."""
+    cfg = cfg or proxy_config()
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"proxy_{tag}_{steps}.pkl")
+    bundle = build(cfg)
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            raw = pickle.load(f)
+        params = jax.tree.map(jnp.asarray, raw["params"])
+        return cfg, params, raw["final_loss"]
+
+    params = bundle.init(jax.random.PRNGKey(0))
+    ocfg = optim.AdamWConfig(lr=lr, weight_decay=0.01, master_dtype="")
+    ost = optim.init(params, ocfg)
+    dcfg = data_config(cfg)
+
+    @jax.jit
+    def step_fn(params, ost, batch):
+        loss, g = jax.value_and_grad(bundle.loss)(params, batch)
+        params, ost = optim.update(g, ost, params, ocfg)
+        return params, ost, loss
+
+    loss = None
+    for step in range(steps):
+        batch = _to_jnp(sample_batch(dcfg, step))
+        params, ost, loss = step_fn(params, ost, batch)
+    final = float(loss)
+    with open(path, "wb") as f:
+        pickle.dump({"params": jax.tree.map(np.asarray, params), "final_loss": final}, f)
+    return cfg, params, final
+
+
+def eval_ppl(cfg: ModelConfig, params, *, n_batches: int = 8, start: int = 10_000):
+    """PPL proxy on held-out synthetic batches (disjoint step range)."""
+    bundle = build(cfg)
+    dcfg = data_config(cfg)
+    loss_fn = jax.jit(bundle.loss)
+    tot = 0.0
+    for i in range(n_batches):
+        batch = _to_jnp(sample_batch(dcfg, start + i))
+        tot += float(loss_fn(params, batch))
+    return float(np.exp(tot / n_batches))
+
+
+def calib_batches(cfg: ModelConfig, n: int = 4, start: int = 20_000):
+    dcfg = data_config(cfg)
+    return [jnp.asarray(sample_batch(dcfg, start + i)["tokens"]) for i in range(n)]
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

@@ -1,0 +1,107 @@
+"""Roofline report generator: reads dryrun_results.jsonl (written by
+launch/dryrun.py) and emits the EXPERIMENTS.md §Dry-run + §Roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--jsonl dryrun_results.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+
+def load(path: str) -> list[dict]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            rows.append(json.loads(line))
+    # keep the newest record per (arch, shape, mesh, compressed)
+    seen = {}
+    for r in rows:
+        key = (r["arch"], r["shape"], r.get("mesh", ""), r.get("compressed", False))
+        seen[key] = r
+    return list(seen.values())
+
+
+def fmt_ms(x: float) -> str:
+    return f"{x*1e3:.2f}"
+
+
+def roofline_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | t_compute ms | t_memory ms | t_collective ms | bound "
+        "| MODEL_FLOPS | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r.get("mesh") != "16x16" or r.get("compressed"):
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP({r['reason']}) | — | — | — |")
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"FAIL({r.get('error','')[:40]}) | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} | "
+            f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+            f"{r['bound']} | {r['model_flops']:.2e} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def memory_table(rows: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | args GiB/dev | temp GiB/dev | collectives (deployed) |",
+        "|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9),
+                                         r.get("mesh", ""))):
+        if r.get("compressed"):
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP |")
+            continue
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','')} "
+                       f"| — | — | FAIL: {r.get('error','')[:60]} |")
+            continue
+        coll = r.get("collective_breakdown_deployed", {})
+        csum = ", ".join(f"{k.split('-')[-1]}:{v/2**20:.0f}M"
+                         for k, v in coll.items() if v)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['argument_gib_per_dev']:.2f} | {r['temp_gib_per_dev']:.2f} | "
+            f"{csum or '—'} |")
+    return "\n".join(out)
+
+
+def summarize(rows: list[dict]) -> str:
+    by = defaultdict(int)
+    for r in rows:
+        by[(r.get("mesh", "?"), r["status"])] += 1
+    lines = [f"  {mesh}: {status} × {n}" for (mesh, status), n in sorted(by.items())]
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="dryrun_results.jsonl")
+    args = ap.parse_args(argv)
+    rows = load(args.jsonl)
+    print("## §Dry-run (memory proof, both meshes)\n")
+    print(memory_table(rows))
+    print("\n## §Roofline (single-pod 16×16, per-device terms)\n")
+    print(roofline_table(rows))
+    print("\n## summary\n")
+    print(summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

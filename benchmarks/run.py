@@ -1,0 +1,57 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints a human-readable section per table plus the required
+``name,us_per_call,derived`` CSV lines at the end.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    try:
+        out = fn()
+        ok = True
+    except Exception:
+        traceback.print_exc()
+        out, ok = None, False
+    dt = (time.perf_counter() - t0) * 1e6
+    return dt, out, ok
+
+
+def main(argv=None):
+    argv = argv if argv is not None else sys.argv[1:]
+
+    from benchmarks import t1_truncation, t2_methods, t8_remap, t15_t16_t17, t23_speed
+    from benchmarks import kernels_bench
+
+    sections = [
+        ("t1_truncation", t1_truncation.main),
+        ("t2_methods", t2_methods.main),
+        ("t8_remap", t8_remap.main),
+        ("t15_t16_t17_fig3", t15_t16_t17.main),
+        ("t23_speed", t23_speed.main),
+        ("kernels", kernels_bench.main),
+    ]
+
+    csv = ["name,us_per_call,derived"]
+    failures = 0
+    for name, fn in sections:
+        dt, out, ok = _timed(fn)
+        derived = "ok" if ok else "FAIL"
+        csv.append(f"{name},{dt:.1f},{derived}")
+        failures += 0 if ok else 1
+
+    print("\n== CSV ==")
+    print("\n".join(csv))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

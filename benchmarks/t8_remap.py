@@ -1,0 +1,49 @@
+"""Paper Table 8: remapping ablation — Remap(16bit) vs Remap(8+16bit, i.e.
+the mixed-precision quantized storage) vs no remap, at equal storage budget.
+Claims: quantization inside the remap costs almost nothing; remap ≫ no-remap,
+most dramatically at low ratios.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+from repro.models.compression import compress_model_params
+
+
+def run(ratios=(0.8, 0.6, 0.4)):
+    cfg, params, _ = common.train_proxy_model()
+    calib = common.calib_batches(cfg, n=2)
+    rows = []
+    for ratio in ratios:
+        # Remap(16bit): bijective k budget, factors kept bf16/f32 (quantize off)
+        p16, _ = compress_model_params(params, cfg, calib, ratio,
+                                       method="dobi", quantize=False)
+        # Remap(8+16bit): Algorithm 3 storage (int8 packed regions)
+        p816, _ = compress_model_params(params, cfg, calib, ratio,
+                                        method="dobi", quantize=True)
+        # W/o remap: classic k(m+n) budget at the same ratio
+        pno, _ = compress_model_params(params, cfg, calib, ratio,
+                                       method="dobi_noremap", quantize=False)
+        rows.append({
+            "ratio": ratio,
+            "remap_16bit": common.eval_ppl(cfg, p16),
+            "remap_8_16bit": common.eval_ppl(cfg, p816),
+            "no_remap": common.eval_ppl(cfg, pno),
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("\n# T8: remap ablation (PPL proxy)")
+    print(f"{'ratio':>6} {'Remap(16b)':>12} {'Remap(8+16b)':>13} {'W/o remap':>12}")
+    for r in rows:
+        print(f"{r['ratio']:>6.1f} {r['remap_16bit']:>12.2f} "
+              f"{r['remap_8_16bit']:>13.2f} {r['no_remap']:>12.2f}")
+    low = rows[-1]
+    assert low["remap_8_16bit"] < low["no_remap"], "remap should win at 0.4"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

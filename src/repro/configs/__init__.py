@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, TrainConfig, ShapeConfig, SHAPES, parse_overrides
+from repro.configs.registry import REGISTRY, ASSIGNED_ARCHS, get_config, smoke_config, VOCAB_ORIGINAL

@@ -1,0 +1,150 @@
+"""Model/config system. Plain dataclasses + CLI `--set key=value` overrides —
+no YAML dependency, everything is importable and type-checked.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "model"
+    family: str = "dense"          # dense | moe | ssm | hybrid | vlm | audio
+
+    # trunk
+    num_layers: int = 4
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0              # 0 → d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    act: str = "silu"              # silu (gated) | gelu (gated)
+    norm_type: str = "rmsnorm"     # rmsnorm | nonparametric
+    qk_norm: bool = False
+    tie_embeddings: bool = False
+
+    # attention
+    rope_theta: float = 10000.0
+    sliding_window: int = 0        # 0 → full attention
+    global_every: int = 0          # gemma: 1 global layer per N (others windowed)
+    attn_block_q: int = 512        # blockwise-attention tile sizes
+    attn_block_kv: int = 512
+    causal_block_skip: bool = True # skip fully-masked KV blocks (beyond-paper opt)
+    unroll_attn_kv: bool = False   # unroll attention kv loop (cost probes only)
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    ssm_conv_width: int = 4
+    ssm_groups: int = 1
+    attn_every: int = 0            # zamba: shared attn block after every N mamba layers
+
+    # enc-dec / frontends
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    frontend: str = ""             # "" | audio | vision  (stub: precomputed embeddings)
+    num_prefix_tokens: int = 0     # vlm patch tokens / audio frames
+    max_source_positions: int = 1500
+
+    # numerics / scale
+    dtype: str = "bfloat16"
+    max_seq_len: int = 1 << 19
+    remat: str = "block"           # none | block | full
+    scan_layers: bool = True
+    train_microbatch: int = 0      # gradient-accumulation steps (0 = off)
+
+    # Dobi-SVD integration
+    compress_ratio: float = 0.0    # 0 → uncompressed; else target parameter ratio
+    compress_quant: bool = True    # remapped int8 storage for factors
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+
+    @property
+    def d_inner(self) -> int:      # mamba
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic (or bounded-KV) long-context decode."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window > 0  # gemma-style local:global
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatch: int = 0            # 0 → no gradient accumulation
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    master_dtype: str = "float32"  # "" → no master copy (pure bf16 + fp32 update math)
+    opt_state_dtype: str = "float32"
+    grad_compression: str = ""     # "" | int8  (cross-pod all-reduce compression)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str = "train_4k"
+    seq_len: int = 4096
+    global_batch: int = 256
+    kind: str = "train"            # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def parse_overrides(cfg: Any, pairs: list[str]):
+    """Apply --set key=value overrides (ints/floats/bools auto-coerced)."""
+    fields = {f.name: f for f in dataclasses.fields(cfg)}
+    kw = {}
+    for pair in pairs:
+        key, _, raw = pair.partition("=")
+        if key not in fields:
+            raise KeyError(f"unknown config field {key!r}")
+        ftype = fields[key].type
+        val: Any = raw
+        if ftype in ("int", int):
+            val = int(raw)
+        elif ftype in ("float", float):
+            val = float(raw)
+        elif ftype in ("bool", bool):
+            val = raw.lower() in ("1", "true", "yes")
+        kw[key] = val
+    return replace(cfg, **kw)

@@ -1,0 +1,13 @@
+"""Config for --arch phi3.5-moe-42b-a6.6b (see registry.py for the exact dims)."""
+
+from repro.configs.registry import get_config, smoke_config
+
+NAME = "phi3.5-moe-42b-a6.6b"
+
+
+def config():
+    return get_config(NAME)
+
+
+def smoke():
+    return smoke_config(NAME)

@@ -1,0 +1,13 @@
+"""Config for --arch qwen3-14b (see registry.py for the exact dims)."""
+
+from repro.configs.registry import get_config, smoke_config
+
+NAME = "qwen3-14b"
+
+
+def config():
+    return get_config(NAME)
+
+
+def smoke():
+    return smoke_config(NAME)

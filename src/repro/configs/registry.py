@@ -1,0 +1,181 @@
+"""Architecture registry: the 10 assigned configs (+ llama-7b, the paper's own
+subject) as exact ModelConfigs, plus reduced same-family smoke configs.
+
+Vocab sizes not divisible by the 16-way model axis are padded to the next
+multiple of 256 (standard practice; the original size is kept in
+`VOCAB_ORIGINAL` for reporting). All other dims divide the production mesh.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+VOCAB_PAD = 256
+VOCAB_ORIGINAL: dict[str, int] = {}
+
+
+def _pad_vocab(name: str, v: int) -> int:
+    VOCAB_ORIGINAL[name] = v
+    return ((v + VOCAB_PAD - 1) // VOCAB_PAD) * VOCAB_PAD
+
+
+def phi35_moe() -> ModelConfig:
+    # [hf:microsoft/Phi-3.5-MoE-instruct; hf] 42B total / 6.6B active
+    return ModelConfig(
+        name="phi3.5-moe-42b-a6.6b", family="moe",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=6400, vocab_size=_pad_vocab("phi3.5-moe-42b-a6.6b", 32064),
+        num_experts=16, num_experts_per_tok=2, train_microbatch=8,
+    )
+
+
+def grok1() -> ModelConfig:
+    # [hf:xai-org/grok-1; unverified] 314B total
+    return ModelConfig(
+        name="grok-1-314b", family="moe",
+        num_layers=64, d_model=6144, num_heads=48, num_kv_heads=8,
+        d_ff=32768, vocab_size=_pad_vocab("grok-1-314b", 131072),
+        num_experts=8, num_experts_per_tok=2, train_microbatch=8,
+    )
+
+
+def zamba2() -> ModelConfig:
+    # [arXiv:2411.15242; hf] Mamba2 backbone + shared attention blocks
+    return ModelConfig(
+        name="zamba2-2.7b", family="hybrid",
+        num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+        d_ff=10240, vocab_size=_pad_vocab("zamba2-2.7b", 32000),
+        ssm_state=64, ssm_expand=2, ssm_headdim=64, attn_every=6,
+    )
+
+
+def mamba2() -> ModelConfig:
+    # [arXiv:2405.21060; unverified] SSD, attention-free
+    return ModelConfig(
+        name="mamba2-2.7b", family="ssm",
+        num_layers=64, d_model=2560, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=_pad_vocab("mamba2-2.7b", 50280),
+        ssm_state=128, ssm_expand=2, ssm_headdim=64,
+    )
+
+
+def qwen3_14b() -> ModelConfig:
+    # [hf:Qwen/Qwen3-8B; hf] qk_norm, GQA
+    return ModelConfig(
+        name="qwen3-14b", family="dense",
+        num_layers=40, d_model=5120, num_heads=40, num_kv_heads=8,
+        d_ff=17408, vocab_size=_pad_vocab("qwen3-14b", 151936),
+        qk_norm=True, train_microbatch=4,
+    )
+
+
+def gemma3_27b() -> ModelConfig:
+    # [hf:google/gemma-3-1b-pt; unverified] 5:1 local:global, 128k context
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        num_layers=62, d_model=5376, num_heads=32, num_kv_heads=16,
+        head_dim=128, d_ff=21504, vocab_size=_pad_vocab("gemma3-27b", 262144),
+        sliding_window=1024, global_every=6, act="gelu", train_microbatch=8,
+    )
+
+
+def gemma3_4b() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b", family="dense",
+        num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4,
+        head_dim=256, d_ff=10240, vocab_size=_pad_vocab("gemma3-4b", 262144),
+        sliding_window=1024, global_every=6, act="gelu",
+    )
+
+
+def olmo_1b() -> ModelConfig:
+    # [arXiv:2402.00838; hf] non-parametric LayerNorm
+    return ModelConfig(
+        name="olmo-1b", family="dense",
+        num_layers=16, d_model=2048, num_heads=16, num_kv_heads=16,
+        d_ff=8192, vocab_size=_pad_vocab("olmo-1b", 50304),
+        norm_type="nonparametric",
+    )
+
+
+def internvl2_1b() -> ModelConfig:
+    # [arXiv:2404.16821; hf] InternViT (stub) + InternLM2/Qwen2-class backbone
+    return ModelConfig(
+        name="internvl2-1b", family="vlm",
+        num_layers=24, d_model=896, num_heads=14, num_kv_heads=2,
+        d_ff=4864, vocab_size=_pad_vocab("internvl2-1b", 151655),
+        num_prefix_tokens=256, frontend="vision",
+    )
+
+
+def whisper_base() -> ModelConfig:
+    # [arXiv:2212.04356; unverified] enc-dec; conv frontend stubbed
+    return ModelConfig(
+        name="whisper-base", family="audio", is_encoder_decoder=True,
+        num_layers=6, encoder_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+        d_ff=2048, vocab_size=_pad_vocab("whisper-base", 51865),
+        frontend="audio", max_source_positions=1500, act="gelu",
+        max_seq_len=32768 + 8,
+    )
+
+
+def llama7b() -> ModelConfig:
+    # The paper's own subject model (Touvron et al. 2023).
+    return ModelConfig(
+        name="llama-7b", family="dense",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=32,
+        d_ff=11008, vocab_size=_pad_vocab("llama-7b", 32000),
+    )
+
+
+REGISTRY = {
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "grok-1-314b": grok1,
+    "zamba2-2.7b": zamba2,
+    "mamba2-2.7b": mamba2,
+    "qwen3-14b": qwen3_14b,
+    "gemma3-27b": gemma3_27b,
+    "gemma3-4b": gemma3_4b,
+    "olmo-1b": olmo_1b,
+    "internvl2-1b": internvl2_1b,
+    "whisper-base": whisper_base,
+    "llama-7b": llama7b,
+}
+
+ASSIGNED_ARCHS = [k for k in REGISTRY if k != "llama-7b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    return REGISTRY[name]()
+
+
+def smoke_config(name: str) -> ModelConfig:
+    """Reduced same-family config: small widths/layers, runnable on CPU."""
+    full = get_config(name)
+    kw = dict(
+        name=full.name + "-smoke",
+        num_layers=4, d_model=64, d_ff=128, vocab_size=512,
+        max_seq_len=512, remat="none", dtype="float32",
+    )
+    if full.family == "ssm":
+        kw.update(num_heads=0, num_kv_heads=0, ssm_state=16, ssm_headdim=16,
+                  ssm_chunk=8, d_ff=0)
+    else:
+        kw.update(num_heads=4, num_kv_heads=2 if full.num_kv_heads < full.num_heads else 4,
+                  head_dim=16)
+    if full.family == "moe":
+        # capacity 8.0 → dropless at smoke scale, so prefill/decode parity
+        # is exact (capacity drops are a training-time approximation)
+        kw.update(num_experts=4, num_experts_per_tok=2, moe_capacity_factor=8.0)
+    if full.family == "hybrid":
+        kw.update(ssm_state=16, ssm_headdim=16, ssm_chunk=8, attn_every=2)
+    if full.global_every:
+        kw.update(sliding_window=8, global_every=3, num_layers=7)
+    elif full.sliding_window:
+        kw.update(sliding_window=8)
+    if full.family == "vlm":
+        kw.update(num_prefix_tokens=8)
+    if full.family == "audio":
+        kw.update(encoder_layers=2, num_layers=2, max_source_positions=16,
+                  max_seq_len=64)
+    return full.with_overrides(**kw)

@@ -1,0 +1,13 @@
+"""Config for --arch zamba2-2.7b (see registry.py for the exact dims)."""
+
+from repro.configs.registry import get_config, smoke_config
+
+NAME = "zamba2-2.7b"
+
+
+def config():
+    return get_config(NAME)
+
+
+def smoke():
+    return smoke_config(NAME)

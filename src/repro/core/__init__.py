@@ -1,0 +1,59 @@
+"""Dobi-SVD core: the paper's contribution as composable JAX modules."""
+
+from repro.core.svd import SVDConfig, lowrank_svd, truncated_reconstruct
+from repro.core.svd import svd as stable_svd
+from repro.core import svd as svd_module  # un-shadowed module handle
+
+svd = stable_svd  # public alias (NOTE: shadows the submodule name on the package;
+                  # import the module via `from repro.core.svd import ...`)
+from repro.core.truncation import (
+    TruncationConfig,
+    theta_to_k,
+    k_to_theta,
+    soft_truncate,
+    soft_gate,
+    soft_rank,
+    matrix_ratio,
+    model_ratio,
+    ratio_loss,
+    max_k_for_ratio,
+)
+from repro.core.ipca import (
+    IPCAState,
+    ipca_init,
+    ipca_update,
+    ipca_fit,
+    pca_fit,
+    update_weight,
+    weight_factors,
+    activation_basis,
+)
+from repro.core.remap import (
+    RemappedWeight,
+    remap_compress,
+    remap_decompress,
+    remap_reconstruct,
+    remap_bytes,
+    packed_view,
+    unpack_view,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.core.lowrank import (
+    LowRankParams,
+    lowrank_from_dense,
+    lowrank_from_basis,
+    lowrank_apply,
+    QuantLowRankParams,
+    quant_lowrank_from_dense,
+    quant_lowrank_apply,
+)
+from repro.core.planner import (
+    MatrixSpec,
+    plan_uniform,
+    plan_energy_waterfill,
+    plan_from_trained_k,
+    achieved_ratio,
+)
+from repro.core.compress import compress, CompressionReport, CompressedMatrix
+from repro.core.rank_training import RankTrainConfig, RankTrainResult, train_ranks, init_theta

@@ -1,0 +1,67 @@
+"""Baseline SVD-compression methods the paper compares against (Table 2).
+
+  * `svd_weight_truncate` — classic SVD on W (paper "Weight" row, Table 1);
+  * `asvd`   — ASVD (Yuan et al. 2023): scale W by a diagonal activation-
+               magnitude matrix S, SVD(SW), unscale: W ≈ S⁻¹·(SW)_k;
+  * `svd_llm` — SVD-LLM (Wang et al. 2024): truncation-aware data whitening
+               with the Cholesky factor of the input Gram matrix
+               E[xᵀx] = LLᵀ; truncate SVD(LᵀW); W ≈ L⁻ᵀ·(LᵀW)_k.
+
+All return a rank-k dense matrix (callers may factor it with
+core.lowrank.lowrank_from_dense for deployment).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _truncate(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    return (u[:, :k] * s[None, :k]) @ vt[:k, :]
+
+
+def svd_weight_truncate(w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Plain weight-SVD truncation."""
+    return _truncate(w, k).astype(w.dtype)
+
+
+def activation_truncate(a: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Direct activation truncation (paper Table 1 "Activation" row)."""
+    return _truncate(a, k).astype(a.dtype)
+
+
+def asvd(w: jnp.ndarray, x_calib: jnp.ndarray, k: int, alpha: float = 0.5) -> jnp.ndarray:
+    """ASVD: S = diag(mean|x|^α) on the input channels; W_k = S⁻¹ (S W)_k.
+
+    w: (d_in, d_out); x_calib: (T, d_in).
+    """
+    s_diag = jnp.mean(jnp.abs(x_calib.astype(jnp.float32)), axis=0) ** alpha
+    s_diag = jnp.where(s_diag <= 1e-6, 1e-6, s_diag)
+    sw = w.astype(jnp.float32) * s_diag[:, None]
+    sw_k = _truncate(sw, k)
+    return (sw_k / s_diag[:, None]).astype(w.dtype)
+
+
+def svd_llm(w: jnp.ndarray, x_calib: jnp.ndarray, k: int, damp: float = 1e-4) -> jnp.ndarray:
+    """SVD-LLM: whiten with L = chol(E[xᵀx] + damp·I); W_k = L⁻ᵀ (LᵀW)_k.
+
+    The whitened truncation minimizes ‖x(W − W_k)‖_F over rank-k W_k given the
+    calibration second moments.
+    """
+    x32 = x_calib.astype(jnp.float32)
+    gram = x32.T @ x32 / x32.shape[0]
+    d = gram.shape[0]
+    tr = jnp.trace(gram) / d
+    l = jnp.linalg.cholesky(gram + damp * tr * jnp.eye(d, dtype=jnp.float32))
+    lw = l.T @ w.astype(jnp.float32)
+    lw_k = _truncate(lw, k)
+    w_k = jnp.linalg.solve(l.T, lw_k)
+    return w_k.astype(w.dtype)
+
+
+def activation_frobenius_error(w_orig, w_comp, x_calib) -> jnp.ndarray:
+    """‖xW − xW_c‖_F / ‖xW‖_F — the metric all these methods target."""
+    a = x_calib.astype(jnp.float32) @ w_orig.astype(jnp.float32)
+    ac = x_calib.astype(jnp.float32) @ w_comp.astype(jnp.float32)
+    return jnp.linalg.norm(a - ac) / jnp.maximum(jnp.linalg.norm(a), 1e-12)

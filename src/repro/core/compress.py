@@ -1,0 +1,168 @@
+"""End-to-end compression pipeline (model-agnostic).
+
+Stages (paper Fig. 1):
+  1. calibrate  — run calibration batches through each matrix, IPCA the
+                  activation right-singular bases → shared basis V per matrix;
+  2. plan       — integer ranks from trained soft-k's (Dobi) or spectral
+                  energy waterfilling (training-free), meeting R_tar exactly;
+  3. update     — W̃ = W V_k V_kᵀ (Eckart–Young–Mirsky optimal per A.4.1);
+  4. remap      — optional Algorithm-3 mixed-precision storage.
+
+Works on flat dicts {name: (W, calib_x)} so any model definition can feed it;
+models/api.py provides the extraction for our transformer stack.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as baselines_lib
+from repro.core import ipca as ipca_lib
+from repro.core import lowrank as lowrank_lib
+from repro.core import planner as planner_lib
+
+
+@dataclass
+class CompressedMatrix:
+    name: str
+    k: int
+    factors: lowrank_lib.LowRankParams | None = None
+    quant: lowrank_lib.QuantLowRankParams | None = None
+    dense: jnp.ndarray | None = None  # baselines return dense rank-k matrices
+
+    def apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.quant is not None:
+            return lowrank_lib.quant_lowrank_apply(self.quant, x)
+        if self.factors is not None:
+            return lowrank_lib.lowrank_apply(self.factors, x)
+        return x @ self.dense
+
+    def stored_params(self, remap: bool) -> int:
+        if self.quant is not None:
+            # 16-bit-equivalent element count of the packed buffer
+            return lowrank_lib.quant_lowrank_bytes(self.quant) // 2
+        if self.factors is not None:
+            return lowrank_lib.lowrank_params_count(self.factors)
+        m, n = self.dense.shape
+        return self.k * (m + n)
+
+
+@dataclass
+class CompressionReport:
+    method: str
+    target_ratio: float
+    achieved_ratio: float
+    ks: dict[str, int]
+    matrices: dict[str, CompressedMatrix] = field(repr=False, default_factory=dict)
+
+
+def _specs(weights: Mapping[str, jnp.ndarray]) -> list[planner_lib.MatrixSpec]:
+    return [planner_lib.MatrixSpec(nm, int(w.shape[0]), int(w.shape[1])) for nm, w in weights.items()]
+
+
+def calibrate_bases(
+    weights: Mapping[str, jnp.ndarray],
+    calib_x: Mapping[str, jnp.ndarray],
+    max_rank: Mapping[str, int],
+) -> dict[str, jnp.ndarray]:
+    """IPCA over per-batch activation bases. calib_x[name]: (B, T, d_in)."""
+    bases = {}
+    for name, w in weights.items():
+        xs = calib_x[name]
+        k = max_rank[name]
+        v_list = []
+        for b in range(xs.shape[0]):
+            a = xs[b].astype(jnp.float32) @ w.astype(jnp.float32)
+            v_list.append(ipca_lib.activation_basis(a, min(k, min(a.shape))))
+        v_stack = jnp.stack(v_list)
+        bases[name] = ipca_lib.ipca_fit(v_stack, k)
+    return bases
+
+
+def activation_spectra(
+    weights: Mapping[str, jnp.ndarray],
+    calib_x: Mapping[str, jnp.ndarray],
+) -> dict[str, np.ndarray]:
+    """Mean singular spectrum of activations per matrix (for the planner)."""
+    spectra = {}
+    for name, w in weights.items():
+        xs = calib_x[name]
+        a = xs.reshape(-1, xs.shape[-1]).astype(jnp.float32) @ w.astype(jnp.float32)
+        s = jnp.linalg.svd(a, compute_uv=False)
+        spectra[name] = np.asarray(s)
+    return spectra
+
+
+def compress(
+    weights: Mapping[str, jnp.ndarray],
+    calib_x: Mapping[str, jnp.ndarray],
+    target_ratio: float,
+    *,
+    method: str = "dobi",           # dobi | dobi_noremap | plain | asvd | svd_llm
+    trained_soft_ks: Mapping[str, float] | None = None,
+    quantize: bool | None = None,
+) -> CompressionReport:
+    names = list(weights.keys())
+    specs = _specs(weights)
+    remap = method == "dobi"
+    if quantize is None:
+        quantize = remap
+
+    # --- plan integer ranks -------------------------------------------------
+    if method in ("dobi", "dobi_noremap"):
+        if trained_soft_ks is not None:
+            ks = planner_lib.plan_from_trained_k(
+                specs, [float(trained_soft_ks[nm]) for nm in names], target_ratio, remap=remap
+            )
+        else:
+            spectra = activation_spectra(weights, calib_x)
+            ks = planner_lib.plan_energy_waterfill(
+                specs, [spectra[nm] for nm in names], target_ratio, remap=remap
+            )
+    else:
+        ks = planner_lib.plan_uniform(specs, target_ratio, remap=False)
+    kmap = dict(zip(names, ks))
+
+    # --- compress each matrix ----------------------------------------------
+    out: dict[str, CompressedMatrix] = {}
+    if method in ("dobi", "dobi_noremap"):
+        bases = calibrate_bases(weights, calib_x, kmap)
+        for nm in names:
+            v_k = bases[nm][:, : kmap[nm]]
+            if quantize:
+                w_tilde = ipca_lib.update_weight(weights[nm].astype(jnp.float32), v_k)
+                out[nm] = CompressedMatrix(
+                    nm, kmap[nm], quant=lowrank_lib.quant_lowrank_from_dense(w_tilde, kmap[nm])
+                )
+            else:
+                out[nm] = CompressedMatrix(
+                    nm, kmap[nm], factors=lowrank_lib.lowrank_from_basis(weights[nm], v_k)
+                )
+    else:
+        fn: Callable
+        for nm in names:
+            w, k = weights[nm], kmap[nm]
+            xs = calib_x[nm].reshape(-1, calib_x[nm].shape[-1])
+            if method == "plain":
+                dense = baselines_lib.svd_weight_truncate(w, k)
+            elif method == "asvd":
+                dense = baselines_lib.asvd(w, xs, k)
+            elif method == "svd_llm":
+                dense = baselines_lib.svd_llm(w, xs, k)
+            else:
+                raise ValueError(f"unknown method {method!r}")
+            out[nm] = CompressedMatrix(nm, k, factors=lowrank_lib.lowrank_from_dense(dense, k))
+
+    total = sum(s.params for s in specs)
+    used = sum(out[nm].stored_params(remap) for nm in names)
+    return CompressionReport(
+        method=method,
+        target_ratio=target_ratio,
+        achieved_ratio=used / total,
+        ks=kmap,
+        matrices=out,
+    )

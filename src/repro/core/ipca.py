@@ -1,0 +1,124 @@
+"""Incremental PCA weight update (paper §3.2, Algorithm 2, Appendix A.4.1).
+
+Goal: given per-calibration-batch right singular bases {V_i} of the activations
+A_i = x_i W, find the rank-k basis V maximizing Σ_i ‖Vᵀ V_i‖²_F — the principal
+column subspace of [V_1 … V_n] — and update
+
+    W̃ = W V G_k Vᵀ  =  (W V_k) (V_kᵀ)  =  W₁ W₂            (rank k)
+
+PCA over the concatenated bases needs O(n_batches · n · k) memory; IPCA keeps a
+constant-size running factorization: after each batch, SVD of the (n, k+k_i)
+matrix [V_old·diag(s_old), V_i] and keep the top-k left singular vectors.
+Per-step memory is O(n · (k + k_i)) — independent of the stream length
+(reproduced in benchmarks/fig3_ipca_memory.py).
+
+The paper's pseudocode includes running mean-centering (classic IPCA); the
+derivation in A.4.1 is uncentered — `center=False` is the default and both are
+supported.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class IPCAState(NamedTuple):
+    components: jnp.ndarray   # (n, k) current orthonormal basis
+    weights: jnp.ndarray      # (k,) singular weights of the running factorization
+    mean: jnp.ndarray         # (n,) running column mean (only if center=True)
+    count: jnp.ndarray        # scalar: number of batches absorbed
+
+
+def ipca_init(n: int, k: int, dtype=jnp.float32) -> IPCAState:
+    return IPCAState(
+        components=jnp.zeros((n, k), dtype),
+        weights=jnp.zeros((k,), dtype),
+        mean=jnp.zeros((n,), dtype),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def ipca_update(state: IPCAState, v_new: jnp.ndarray, *, center: bool = False) -> IPCAState:
+    """Absorb one batch basis v_new (n, k_i) into the running factorization."""
+    n, k = state.components.shape
+    v_new = v_new.astype(state.components.dtype)
+
+    if center:
+        cnt = state.count.astype(v_new.dtype)
+        batch_mean = jnp.mean(v_new, axis=1)
+        new_mean = (state.mean * cnt + batch_mean) / (cnt + 1.0)
+        v_new = v_new - new_mean[:, None]
+        mean_out = new_mean
+    else:
+        mean_out = state.mean
+
+    stacked = jnp.concatenate([state.components * state.weights[None, :], v_new], axis=1)
+    u, s, _ = jnp.linalg.svd(stacked, full_matrices=False)
+    return IPCAState(
+        components=u[:, :k],
+        weights=s[:k],
+        mean=mean_out,
+        count=state.count + 1,
+    )
+
+
+def ipca_fit(v_stack: jnp.ndarray, k: int, *, center: bool = False) -> jnp.ndarray:
+    """jit-friendly IPCA over stacked bases v_stack (B, n, k_i) → V (n, k)."""
+    n = v_stack.shape[1]
+    state = ipca_init(n, k, v_stack.dtype)
+
+    def step(st, v_i):
+        return ipca_update(st, v_i, center=center), None
+
+    state, _ = jax.lax.scan(step, state, v_stack)
+    return state.components
+
+
+def pca_fit(v_list: Sequence[jnp.ndarray] | jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reference (memory-hungry) PCA: SVD of the full concatenation [V_1 … V_B]."""
+    if isinstance(v_list, jnp.ndarray) and v_list.ndim == 3:
+        stacked = jnp.concatenate(list(v_list), axis=1)
+    else:
+        stacked = jnp.concatenate(list(v_list), axis=1)
+    u, _, _ = jnp.linalg.svd(stacked, full_matrices=False)
+    return u[:, :k]
+
+
+def subspace_objective(v: jnp.ndarray, v_list: jnp.ndarray) -> jnp.ndarray:
+    """Σ_i ‖Vᵀ V_i‖²_F — the quantity PCA maximizes (A.4.1); used by tests."""
+    proj = jnp.einsum("nk,bnj->bkj", v, v_list)
+    return jnp.sum(proj * proj)
+
+
+# ---------------------------------------------------------------------------
+# Weight update
+# ---------------------------------------------------------------------------
+
+def update_weight(w: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """W̃ = W V Vᵀ for an already-truncated basis V = V[:, :k]. Shape (m, n)."""
+    return (w @ v) @ v.T
+
+
+def weight_factors(w: jnp.ndarray, v: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-rank factors: W̃ = W₁ @ W₂ with W₁ = W V_k (m, k), W₂ = V_kᵀ (k, n)."""
+    return w @ v, v.T
+
+
+def activation_basis(a: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Top-k right singular basis V_A[:, :k] of one activation matrix A (T, n)."""
+    _, _, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    return vt[:k, :].T
+
+
+def ipca_memory_bytes(n: int, k: int, k_i: int, dtype_bytes: int = 4) -> int:
+    """Peak working-set bytes of one IPCA step (the Fig. 3c comparison)."""
+    return (n * (k + k_i) + n * k + (k + k_i)) * dtype_bytes
+
+
+def pca_memory_bytes(n: int, k_i: int, batches: int, dtype_bytes: int = 4) -> int:
+    """Peak bytes of full-concatenation PCA over `batches` bases."""
+    cols = k_i * batches
+    return (n * cols + n * min(n, cols) + min(n, cols)) * dtype_bytes

@@ -1,0 +1,64 @@
+"""Low-rank factored linear layers — the deployable form of a compressed matrix.
+
+`LowRankLinear` holds W1 (d_in, k), W2 (k, d_out) with y = (x @ W1) @ W2 — two
+skinny matmuls, 2·T·k·(d_in+d_out) FLOPs vs 2·T·d_in·d_out dense, and
+k·(d_in+d_out) weight bytes vs d_in·d_out. On TPU the pair is executed by the
+fused Pallas kernel (kernels/lowrank_matmul.py) that keeps the (T, k)
+intermediate in VMEM.
+
+`QuantLowRankLinear` is the remapped (Algorithm 3) serving form: int8 factor
+rows + bf16 tail + per-column scales, k·max(d_in,d_out) 16-bit-slot bytes.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import remap as remap_lib
+
+
+class LowRankParams(NamedTuple):
+    w1: jnp.ndarray  # (d_in, k)
+    w2: jnp.ndarray  # (k, d_out)
+
+
+def lowrank_from_dense(w: jnp.ndarray, k: int) -> LowRankParams:
+    """SVD-split a dense (already updated) matrix into rank-k factors."""
+    u, s, vt = jnp.linalg.svd(w.astype(jnp.float32), full_matrices=False)
+    return LowRankParams(
+        w1=(u[:, :k] * s[None, :k]).astype(w.dtype),
+        w2=vt[:k, :].astype(w.dtype),
+    )
+
+
+def lowrank_from_basis(w: jnp.ndarray, v: jnp.ndarray) -> LowRankParams:
+    """Factors from the IPCA basis: W̃ = (W V_k)(V_kᵀ) — no extra SVD needed."""
+    return LowRankParams(w1=(w @ v).astype(w.dtype), w2=v.T.astype(w.dtype))
+
+
+def lowrank_apply(params: LowRankParams, x: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ W1) @ W2. Pure-jnp path; kernels/ops.py routes to Pallas on TPU."""
+    return (x @ params.w1) @ params.w2
+
+
+def lowrank_params_count(params: LowRankParams) -> int:
+    return params.w1.size + params.w2.size
+
+
+class QuantLowRankParams(NamedTuple):
+    rw: remap_lib.RemappedWeight
+
+
+def quant_lowrank_from_dense(w: jnp.ndarray, k: int) -> QuantLowRankParams:
+    return QuantLowRankParams(rw=remap_lib.remap_compress(w, k))
+
+
+def quant_lowrank_apply(params: QuantLowRankParams, x: jnp.ndarray) -> jnp.ndarray:
+    w1, w2 = remap_lib.remap_decompress(params.rw, dtype=x.dtype)
+    return (x @ w1) @ w2
+
+
+def quant_lowrank_bytes(params: QuantLowRankParams) -> int:
+    return remap_lib.remap_bytes(params.rw)

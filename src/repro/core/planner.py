@@ -1,0 +1,149 @@
+"""Integer rank allocation across a model's matrices.
+
+Two planners:
+
+  * `plan_from_trained_k` — round the continuous trained k's, then greedily
+    repair toward the exact byte budget (remove/add ranks where the trained
+    soft gate indicates the least/most marginal value). This is the Dobi-SVD
+    path (paper §3.1 output → deployment).
+
+  * `plan_energy_waterfill` — training-free fallback and ablation baseline:
+    given each matrix's singular spectrum, allocate ranks by greedy marginal
+    retained-energy-per-byte (σ²/cost). Subsumes the "uniform k" baseline of
+    paper Table 16 (`plan_uniform`).
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MatrixSpec:
+    name: str
+    m: int
+    n: int
+
+    @property
+    def params(self) -> int:
+        return self.m * self.n
+
+    def cost_per_rank(self, remap: bool = True) -> int:
+        """Stored elements added by one more retained rank."""
+        return max(self.m, self.n) if remap else self.m + self.n
+
+    @property
+    def max_rank(self) -> int:
+        return min(self.m, self.n)
+
+
+def _budget(specs: Sequence[MatrixSpec], ratio: float) -> float:
+    return ratio * sum(s.params for s in specs)
+
+
+def achieved_ratio(specs: Sequence[MatrixSpec], ks: Sequence[int], remap: bool = True) -> float:
+    used = sum(k * s.cost_per_rank(remap) for s, k in zip(specs, ks))
+    return used / sum(s.params for s in specs)
+
+
+def plan_uniform(specs: Sequence[MatrixSpec], ratio: float, remap: bool = True) -> list[int]:
+    """Same ratio for every matrix (SVD-LLM-style uniform allocation)."""
+    ks = []
+    for s in specs:
+        k = int(np.floor(ratio * s.params / s.cost_per_rank(remap)))
+        ks.append(max(0, min(s.max_rank, k)))
+    return ks
+
+
+def plan_energy_waterfill(
+    specs: Sequence[MatrixSpec],
+    spectra: Sequence[np.ndarray],
+    ratio: float,
+    remap: bool = True,
+    min_rank: int = 1,
+    floor_frac: float = 0.25,
+) -> list[int]:
+    """Greedy: repeatedly grant one rank to the matrix with the best σ²/cost.
+
+    spectra[i] is the descending singular-value vector of matrix i (of the
+    *activation* for Dobi-style planning, or the weight for plain SVD).
+    `floor_frac` guarantees each matrix at least that fraction of its uniform
+    allocation — pure energy greed can starve small matrices into degenerate
+    rank-2 bottlenecks that wreck the downstream loss.
+    """
+    budget = _budget(specs, ratio)
+    floors = [
+        max(min_rank, int(floor_frac * ratio * s.params / s.cost_per_rank(remap)))
+        for s in specs
+    ]
+    floors = [min(f, s.max_rank) for f, s in zip(floors, specs)]
+    ks = list(floors)
+    heap = []
+    for i, (s, sig) in enumerate(zip(specs, spectra)):
+        if s.max_rank > ks[i] and len(sig) > ks[i]:
+            gain = float(sig[ks[i]]) ** 2 / s.cost_per_rank(remap)
+            heapq.heappush(heap, (-gain, i))
+    used = float(sum(k * s.cost_per_rank(remap) for k, s in zip(ks, specs)))
+    while heap:
+        neg_gain, i = heapq.heappop(heap)
+        s = specs[i]
+        cost = s.cost_per_rank(remap)
+        if used + cost > budget:
+            continue
+        ks[i] += 1
+        used += cost
+        nxt = ks[i]
+        if nxt < min(s.max_rank, len(spectra[i])):
+            gain = float(spectra[i][nxt]) ** 2 / cost
+            heapq.heappush(heap, (-gain, i))
+    for i, s in enumerate(specs):  # never emit rank-0 matrices (degenerate layer)
+        if ks[i] < min_rank and s.max_rank >= min_rank:
+            ks[i] = min_rank
+    return ks
+
+
+def plan_from_trained_k(
+    specs: Sequence[MatrixSpec],
+    soft_ks: Sequence[float],
+    ratio: float,
+    remap: bool = True,
+    min_rank: int = 1,
+) -> list[int]:
+    """Round trained continuous k's; repair greedily to meet the byte budget.
+
+    Repair ordering uses the fractional part of the soft k as the marginal-value
+    signal (the training already encodes importance in k itself).
+    """
+    budget = _budget(specs, ratio)
+    ks = [int(np.clip(round(sk), min_rank, s.max_rank)) for sk, s in zip(soft_ks, specs)]
+
+    def used(kvec):
+        return sum(k * s.cost_per_rank(remap) for s, k in zip(specs, kvec))
+
+    # Shrink: drop ranks from matrices whose soft-k was rounded up the most.
+    order_shrink = sorted(
+        range(len(specs)), key=lambda i: (round(soft_ks[i]) - soft_ks[i]), reverse=True
+    )
+    j = 0
+    while used(ks) > budget and any(k > min_rank for k in ks):
+        i = order_shrink[j % len(specs)]
+        if ks[i] > min_rank:
+            ks[i] -= 1
+        j += 1
+    # Grow: spend leftover budget where rounding cut the most.
+    order_grow = sorted(
+        range(len(specs)), key=lambda i: (soft_ks[i] - round(soft_ks[i])), reverse=True
+    )
+    progress = True
+    while progress:
+        progress = False
+        for i in order_grow:
+            s = specs[i]
+            if ks[i] < s.max_rank and used(ks) + s.cost_per_rank(remap) <= budget:
+                ks[i] += 1
+                progress = True
+    return ks

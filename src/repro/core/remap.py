@@ -1,0 +1,135 @@
+"""Bijective ratio↔k remapping via mixed-precision storage (paper §3.3, Algo 3).
+
+Classic factored storage of a rank-k m×n matrix costs k(m+n) elements, so
+compression (ratio < 1) forces k < mn/(m+n) — for square matrices, half the
+singular values must die even at ratio 1.0. Dobi-SVD stores k·max(m,n)
+elements instead, making ratio = k·max(m,n)/(mn) a *bijection* on k ∈ [0, min(m,n)]:
+
+  * SVD(W̃) → Ũ_k = (UΣ)[:, :k]  (m, k)   and   V_k = V[:, :k]  (n, k);
+  * the overlapping min(m,n) rows of *both* factors are quantized to int8 and
+    packed pairwise into the bit-budget of one 16-bit row block;
+  * the remaining |m−n| rows of the taller factor stay at 16-bit.
+
+SVD factors are near-Gaussian (paper Fig. 5/6) → absmax int8 quantization is
+near-lossless (paper Table 15; reproduced in benchmarks/t15_quant_error.py).
+
+TPU adaptation: instead of bnb's flat blockwise quantizer we use per-column
+(per-singular-direction) absmax scales — columns of ŨΣ have norm σ_i, so
+per-column scaling tracks the σ dynamic range exactly, and the scales fold
+into the dequant-matmul kernel as a broadcast along the contraction axis.
+`packed_view` produces the physical (max(m,n), k) uint16 buffer to prove the
+footprint claim bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RemappedWeight(NamedTuple):
+    """Mixed-precision storage of a rank-k matrix W̃ = W1 @ W2, W1 (m,k), W2 (k,n).
+
+    With d = min(m, n):
+      u8   : (d, k) int8   — first d rows of ŨΣ = W1
+      v8   : (d, k) int8   — first d rows of V  (= first d cols of W2ᵀ... V_k)
+      tail : (|m−n|, k) bf16 — remaining rows of the taller factor
+      su, sv : (k,) fp32   — per-column absmax scales
+      tall_is_u : bool     — True when m ≥ n (tail belongs to the U factor)
+    """
+
+    u8: jnp.ndarray
+    v8: jnp.ndarray
+    tail: jnp.ndarray
+    su: jnp.ndarray
+    sv: jnp.ndarray
+    tall_is_u: bool
+    m: int
+    n: int
+    k: int
+
+
+def quantize_int8(x: jnp.ndarray, axis: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric absmax int8 quantization along `axis` (scales broadcast there)."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, jnp.squeeze(scale, axis=axis).astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, axis: int = 0, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Inverse of quantize_int8: `axis` is the axis the scales broadcast along."""
+    return (q.astype(jnp.float32) * jnp.expand_dims(scale, axis)).astype(dtype)
+
+
+def remap_compress(w_tilde: jnp.ndarray, k: int) -> RemappedWeight:
+    """Compress a (rank-k or near-rank-k) matrix into remapped storage."""
+    m, n = w_tilde.shape
+    d = min(m, n)
+    u, s, vt = jnp.linalg.svd(w_tilde.astype(jnp.float32), full_matrices=False)
+    w1 = u[:, :k] * s[None, :k]          # (m, k)  = ŨΣ
+    v = vt[:k, :].T                      # (n, k)  = V_k
+
+    u8, su = quantize_int8(w1[:d, :], axis=0)
+    v8, sv = quantize_int8(v[:d, :], axis=0)
+    if m >= n:
+        tail = w1[d:, :].astype(jnp.bfloat16)
+        tall_is_u = True
+    else:
+        tail = v[d:, :].astype(jnp.bfloat16)
+        tall_is_u = False
+    return RemappedWeight(u8=u8, v8=v8, tail=tail, su=su, sv=sv,
+                          tall_is_u=tall_is_u, m=m, n=n, k=k)
+
+
+def remap_decompress(rw: RemappedWeight, dtype=jnp.bfloat16) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reconstruct dense factors (W1 (m,k), W2 (k,n)); W̃ ≈ W1 @ W2."""
+    d = min(rw.m, rw.n)
+    u_low = rw.u8.astype(jnp.float32) * rw.su[None, :]
+    v_low = rw.v8.astype(jnp.float32) * rw.sv[None, :]
+    if rw.tall_is_u:
+        w1 = jnp.concatenate([u_low, rw.tail.astype(jnp.float32)], axis=0)
+        v = v_low
+    else:
+        w1 = u_low
+        v = jnp.concatenate([v_low, rw.tail.astype(jnp.float32)], axis=0)
+    return w1.astype(dtype), v.T.astype(dtype)
+
+
+def remap_reconstruct(rw: RemappedWeight, dtype=jnp.float32) -> jnp.ndarray:
+    w1, w2 = remap_decompress(rw, jnp.float32)
+    return (w1 @ w2).astype(dtype)
+
+
+def remap_bytes(rw: RemappedWeight) -> int:
+    """Physical storage bytes (scales included)."""
+    return (
+        rw.u8.size + rw.v8.size            # two int8 regions
+        + rw.tail.size * 2                 # bf16 tail
+        + (rw.su.size + rw.sv.size) * 4    # fp32 scales
+    )
+
+
+def packed_view(rw: RemappedWeight) -> jnp.ndarray:
+    """The physical (max(m,n), k) uint16 buffer of Algorithm 3.
+
+    Rows [0, d): (u8 << 8) | v8 packed pairs; rows [d, max): bf16 tail bitcast
+    to uint16. Proves storage = k·max(m,n) 16-bit slots.
+    """
+    hi = rw.u8.astype(jnp.uint8).astype(jnp.uint16) << 8
+    lo = rw.v8.astype(jnp.uint8).astype(jnp.uint16)
+    low_rows = hi | lo
+    tail_u16 = jax.lax.bitcast_convert_type(rw.tail, jnp.uint16)
+    return jnp.concatenate([low_rows, tail_u16], axis=0)
+
+
+def unpack_view(buf: jnp.ndarray, rw_meta: RemappedWeight) -> RemappedWeight:
+    """Inverse of `packed_view` (scales/metadata carried separately)."""
+    d = min(rw_meta.m, rw_meta.n)
+    low = buf[:d, :]
+    u8 = (low >> 8).astype(jnp.uint8).astype(jnp.int8)
+    v8 = (low & 0xFF).astype(jnp.uint8).astype(jnp.int8)
+    tail = jax.lax.bitcast_convert_type(buf[d:, :], jnp.bfloat16)
+    return rw_meta._replace(u8=u8, v8=v8, tail=tail)

@@ -1,0 +1,197 @@
+"""Stable differentiable SVD — the numerical heart of Dobi-SVD.
+
+Implements the paper's Algorithms 4/5:
+
+  * forward: (optionally randomized low-rank) SVD, computed in fp32;
+  * backward: the analytic SVD VJP
+
+        gA = U ( skew(Uᵀ gU) ∘ E · Σ  +  Σ · skew(Vᵀ gV) ∘ E  +  diag(gΣ) ) Vᵀ
+             + (I − U Uᵀ) gU Σ⁻¹ Vᵀ  +  U Σ⁻¹ gVᵀ (I − V Vᵀ)
+
+    where E_ij = 1/(σ_j² − σ_i²) explodes when singular values are tiny or close.
+    The paper stabilizes E with three regimes (Algorithm 5):
+
+      1. both σ tiny            → 1/E_ij = eps_grad (a small constant);
+      2. σ_i ≈ σ_j (non-tiny)   → truncated geometric series of
+                                   1/((σ_i−σ_j)(σ_i+σ_j)) expanded in q = σ_j/σ_i,
+                                   summed in closed form with n_taylor terms;
+      3. well separated         → exact 1/((σ_i−σ_j)(σ_i+σ_j)).
+
+All public entry points are jit/grad/vmap-safe pure functions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SVDConfig(NamedTuple):
+    """Numerical-stability knobs (paper defaults: γ=1e-10, K=10)."""
+
+    eps_val: float = 1e-10     # clamp for singular values (paper's γ)
+    eps_grad: float = 1e-10    # 1/E value when both σ are tiny
+    eps_diff: float = 1e-3     # |σ_i − σ_j| threshold for "close" regime
+    n_taylor: int = 10         # K, number of geometric-series terms
+
+
+DEFAULT_SVD_CONFIG = SVDConfig()
+
+
+def _stable_inv_e(s: jnp.ndarray, cfg: SVDConfig) -> jnp.ndarray:
+    """Build the stabilized matrix 1/E with E_ij = σ_j² − σ_i² (i≠j), 1 on diag.
+
+    Returns F with F_ij ≈ 1/(σ_j² − σ_i²), antisymmetric off-diagonal, 0 on diag
+    (the diagonal never contributes: it is multiplied by skew(·) which has zero diag).
+    Computed on the lower triangle (σ_i ≥ σ_j for i<j in descending order — we
+    work with |differences| and antisymmetrize), per Algorithm 5.
+    """
+    k = s.shape[-1]
+    s_clamp = jnp.maximum(s, cfg.eps_val)
+    li = s_clamp[..., :, None]   # λ_i  (row)
+    lj = s_clamp[..., None, :]   # λ_j  (col)
+
+    # Lower triangle: i > j  → in descending order σ_j ≥ σ_i, so take the pair
+    # (big, small) = (λ_j, λ_i) there. We compute on λ_big ≥ λ_small and
+    # antisymmetrize at the end.
+    big = jnp.maximum(li, lj)
+    small = jnp.minimum(li, lj)
+    delta = big - small
+
+    both_tiny = (li <= cfg.eps_val) & (lj <= cfg.eps_val)
+    equal = delta == 0.0
+    close = (delta > 0.0) & (delta <= cfg.eps_diff)
+
+    # Regime 2a (exactly equal, non-tiny): lim of the K-term series = K / (2λ²)·...
+    # Paper uses n_taylor / λ², matching the arithmetic-limit of the series below.
+    inv_equal = cfg.n_taylor / (big * big)
+
+    # Regime 2b (close): 1/(σ_i²−σ_j²) = 1/σ_i² · 1/(1−q²), q = σ_small/σ_big,
+    # ≈ 1/σ_big² · (1 − q^{2K}) / (1 − q²) via the geometric-series closed form.
+    q2 = (small / big) ** 2
+    q2 = jnp.minimum(q2, 1.0 - 1e-12)          # guard the closed form
+    inv_close = (1.0 - q2 ** cfg.n_taylor) / (big * big * (1.0 - q2))
+
+    # Regime 3 (separated): exact.
+    denom = (big - small) * (big + small)
+    inv_exact = 1.0 / jnp.where(denom == 0.0, 1.0, denom)
+
+    inv = jnp.where(close | equal, jnp.where(equal, inv_equal, inv_close), inv_exact)
+    inv = jnp.where(both_tiny, cfg.eps_grad, inv)
+
+    # Sign: F_ij = 1/(σ_j² − σ_i²) is positive when σ_j > σ_i. `inv` above is
+    # 1/(σ_big² − σ_small²) ≥ 0; restore the antisymmetric sign pattern.
+    sign = jnp.where(lj > li, 1.0, -1.0)
+    f = sign * inv
+    eye = jnp.eye(k, dtype=s.dtype)
+    return f * (1.0 - eye)
+
+
+def _skew(x: jnp.ndarray) -> jnp.ndarray:
+    return x - jnp.swapaxes(x, -1, -2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def svd(a: jnp.ndarray, cfg: SVDConfig = DEFAULT_SVD_CONFIG):
+    """Thin SVD with the paper's gradient-stabilized VJP.
+
+    a: (..., m, n). Returns (U (..., m, r), s (..., r), V (..., n, r)) with
+    r = min(m, n). Note: returns V, not Vᵀ.
+    """
+    u, s, vt = jnp.linalg.svd(a.astype(jnp.float32), full_matrices=False)
+    return u, s, jnp.swapaxes(vt, -1, -2)
+
+
+def _svd_fwd(a, cfg):
+    out = svd(a, cfg)
+    return out, out
+
+
+def _svd_bwd(cfg, res, cotangents):
+    u, s, v = res
+    gu, gs, gv = cotangents
+    dtype = jnp.float32
+    u, s, v = u.astype(dtype), s.astype(dtype), v.astype(dtype)
+    gu = jnp.zeros_like(u) if gu is None else gu.astype(dtype)
+    gs = jnp.zeros_like(s) if gs is None else gs.astype(dtype)
+    gv = jnp.zeros_like(v) if gv is None else gv.astype(dtype)
+
+    f = _stable_inv_e(s, cfg)                       # (..., r, r), antisymmetric
+    s_clamp = jnp.maximum(s, cfg.eps_val)
+
+    utgu = jnp.swapaxes(u, -1, -2) @ gu             # (r, r)
+    vtgv = jnp.swapaxes(v, -1, -2) @ gv
+
+    omega_u = _skew(utgu) * f                       # ∘E of the skew parts
+    omega_v = _skew(vtgv) * f
+
+    core = (
+        omega_u * s[..., None, :]                   # skew(UᵀgU)∘E · Σ
+        + s[..., :, None] * omega_v                 # Σ · skew(VᵀgV)∘E
+        + _batched_diag(gs)                         # diag(gΣ)
+    )
+
+    ga = u @ core @ jnp.swapaxes(v, -1, -2)
+
+    # Rectangular completion terms (columns of U / V outside the thin basis):
+    gu_scaled = gu / s_clamp[..., None, :]
+    term1 = (gu_scaled - u @ (jnp.swapaxes(u, -1, -2) @ gu_scaled)) @ jnp.swapaxes(v, -1, -2)
+    gv_scaled = gv / s_clamp[..., None, :]
+    term2 = u @ jnp.swapaxes(gv_scaled - v @ (jnp.swapaxes(v, -1, -2) @ gv_scaled), -1, -2)
+
+    return (ga + term1 + term2,)
+
+
+def _batched_diag(x: jnp.ndarray) -> jnp.ndarray:
+    """diag over the last axis, batched."""
+    eye = jnp.eye(x.shape[-1], dtype=x.dtype)
+    return x[..., None, :] * eye
+
+
+svd.defvjp(_svd_fwd, _svd_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Randomized low-rank SVD (paper Algorithm 4: svd_lowrank(X, q=k, niter=2))
+# ---------------------------------------------------------------------------
+
+def lowrank_svd(
+    a: jnp.ndarray,
+    rank: int,
+    *,
+    niter: int = 2,
+    oversample: int = 8,
+    key: jax.Array | None = None,
+    cfg: SVDConfig = DEFAULT_SVD_CONFIG,
+):
+    """Randomized subspace-iteration SVD (Halko et al.), differentiable.
+
+    Returns (U (m, rank), s (rank,), V (n, rank)). The small dense SVD at the
+    end goes through the gradient-stabilized `svd` above; the sketching path
+    (QR of random projections) is differentiable through jnp.linalg.qr.
+    """
+    m, n = a.shape[-2:]
+    q = min(rank + oversample, min(m, n))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    a32 = a.astype(jnp.float32)
+    g = jax.random.normal(key, a.shape[:-2] + (n, q), dtype=jnp.float32)
+    y = a32 @ g
+    qmat, _ = jnp.linalg.qr(y)
+    for _ in range(niter):
+        z = jnp.swapaxes(a32, -1, -2) @ qmat
+        qz, _ = jnp.linalg.qr(z)
+        y = a32 @ qz
+        qmat, _ = jnp.linalg.qr(y)
+    b = jnp.swapaxes(qmat, -1, -2) @ a32            # (q, n) small
+    ub, s, v = svd(b, cfg)
+    u = qmat @ ub
+    return u[..., :, :rank], s[..., :rank], v[..., :, :rank]
+
+
+def truncated_reconstruct(u: jnp.ndarray, s: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """A ≈ U diag(s) Vᵀ."""
+    return (u * s[..., None, :]) @ jnp.swapaxes(v, -1, -2)

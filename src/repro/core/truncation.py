@@ -1,0 +1,112 @@
+"""Differentiable truncation position (paper §3.1, Algorithm 1).
+
+The learnable per-matrix truncation position k is kept as an unconstrained
+parameter θ and materialized as k = r_max · sigmoid(θ) ("parameter
+renormalization", Fig. 1), keeping k in (0, r_max) with healthy gradients.
+
+The soft truncation gate is
+
+    T(σ_i; k) = σ_i · (0.5 · tanh(β (k − i)) + 0.5),       i = 1..r (1-based)
+
+which → hard top-k truncation as β → ∞.
+
+Ratio accounting (paper §3.3):
+  * classic factored storage:  r = k (m + n) / (m n)
+  * remapped storage (Algo 3): r = k · max(m, n) / (m n)   (bijective in k)
+
+`model_ratio` aggregates per-matrix soft-k ratios into the model-level
+compression ratio R_now used by the multi-objective loss
+    L = L_task + γ_R · |R_now − R_tar|.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TruncationConfig(NamedTuple):
+    beta: float = 10.0          # tanh smoothness (paper: β = 10)
+    remap: bool = True          # use the bijective remapped storage ratio
+    ratio_weight: float = 10.0  # γ_R in the multi-objective loss
+
+
+def theta_to_k(theta: jnp.ndarray, r_max: int | jnp.ndarray) -> jnp.ndarray:
+    """Unconstrained θ → continuous truncation position k ∈ (0, r_max)."""
+    return r_max * jax.nn.sigmoid(theta)
+
+
+def k_to_theta(k: jnp.ndarray, r_max: int | jnp.ndarray) -> jnp.ndarray:
+    """Inverse of `theta_to_k` (for initialization at a chosen k)."""
+    p = jnp.clip(k / r_max, 1e-6, 1.0 - 1e-6)
+    return jnp.log(p) - jnp.log1p(-p)
+
+
+def soft_gate(k: jnp.ndarray, r: int, beta: float = 10.0, dtype=jnp.float32) -> jnp.ndarray:
+    """The gate vector g_i = 0.5·tanh(β(k − i)) + 0.5 for i = 1..r."""
+    i = jnp.arange(1, r + 1, dtype=dtype)
+    return 0.5 * jnp.tanh(beta * (k - i)) + 0.5
+
+
+def soft_truncate(s: jnp.ndarray, k: jnp.ndarray, beta: float = 10.0) -> jnp.ndarray:
+    """Apply T(σ_i; k) along the last axis of s."""
+    r = s.shape[-1]
+    return s * soft_gate(k, r, beta, dtype=s.dtype)
+
+
+def soft_rank(k: jnp.ndarray, r: int, beta: float = 10.0) -> jnp.ndarray:
+    """Differentiable effective rank: Σ_i gate_i  (≈ k for k well inside [1, r])."""
+    return jnp.sum(soft_gate(k, r, beta))
+
+
+def matrix_ratio(k: jnp.ndarray, m: int, n: int, remap: bool = True) -> jnp.ndarray:
+    """Storage ratio of one m×n matrix truncated at (soft) position k."""
+    if remap:
+        return k * max(m, n) / (m * n)
+    return k * (m + n) / (m * n)
+
+
+def matrix_bytes(k: int, m: int, n: int, remap: bool = True, bytes_per_el: int = 2) -> int:
+    """Integer byte count of the compressed storage of one matrix."""
+    if remap:
+        return int(k) * max(m, n) * bytes_per_el
+    return int(k) * (m + n) * bytes_per_el
+
+
+def max_k_for_ratio(ratio: float, m: int, n: int, remap: bool = True) -> int:
+    """Largest integer k whose storage ratio is ≤ `ratio`."""
+    if remap:
+        k = ratio * m * n / max(m, n)
+    else:
+        k = ratio * m * n / (m + n)
+    return max(0, min(min(m, n), int(jnp.floor(k))))
+
+
+def model_ratio(ks: jnp.ndarray, shapes: jnp.ndarray, remap: bool = True) -> jnp.ndarray:
+    """Aggregate compression ratio over a set of matrices.
+
+    ks:     (N,) continuous truncation positions;
+    shapes: (N, 2) integer (m, n) per matrix.
+
+    R_now = Σ_i compressed_params_i / Σ_i original_params_i.
+    """
+    m = shapes[:, 0].astype(jnp.float32)
+    n = shapes[:, 1].astype(jnp.float32)
+    if remap:
+        compressed = ks * jnp.maximum(m, n)
+    else:
+        compressed = ks * (m + n)
+    return jnp.sum(compressed) / jnp.sum(m * n)
+
+
+def ratio_loss(
+    ks: jnp.ndarray,
+    shapes: jnp.ndarray,
+    target_ratio: float,
+    cfg: TruncationConfig = TruncationConfig(),
+) -> jnp.ndarray:
+    """γ_R · |R_now − R_tar| (paper Algorithm 1, step 11)."""
+    r_now = model_ratio(ks, shapes, cfg.remap)
+    return cfg.ratio_weight * jnp.abs(r_now - target_ratio)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticConfig, sample_batch, batches
+from repro.data.pipeline import Prefetcher

@@ -1,0 +1,113 @@
+"""Int8 dequant-matmul Pallas TPU kernel: y = x @ (Wq · scale).
+
+Serving-time primitive for the remapped (Algorithm 3) storage: the int8
+factor regions are dequantized *inside* the matmul tile loop, so only int8
+bytes move HBM→VMEM (the whole point of the mixed-precision storage — the
+memory roofline term scales with int8, not bf16).
+
+Two scale layouts, matching the two factors of a remapped weight:
+  * scale_axis="n": scale (N,)  — per-output-column (the ŨΣ factor: scales
+    indexed by the rank column, which is this matmul's N);
+  * scale_axis="k": scale (K,)  — per-contraction-row (the V_kᵀ factor:
+    scales indexed by rank, which is this matmul's K). Folded into the x tile
+    before the MXU dot, keeping the weight path pure int8.
+
+Grid (M/bm, N/bn, K/bk) with an fp32 VMEM accumulator; K is the innermost
+(fastest) axis so the accumulator lives across the contraction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dequant_kernel_n(x_ref, wq_ref, scale_ref, y_ref, acc_ref, *, nk_steps: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = wq_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kstep == nk_steps - 1)
+    def _emit():
+        y_ref[...] = (acc_ref[...] * scale_ref[...]).astype(y_ref.dtype)
+
+
+def _dequant_kernel_k(x_ref, wq_ref, scale_ref, y_ref, acc_ref, *, nk_steps: int):
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32) * scale_ref[...]     # (bm,bk) * (1,bk)
+    acc_ref[...] += jnp.dot(
+        x, wq_ref[...].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kstep == nk_steps - 1)
+    def _emit():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale_axis", "bm", "bk", "bn", "interpret")
+)
+def dequant_matmul(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    scale_axis: str = "n",
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = x @ (wq · scale). x: (M, K) bf16/f32, wq: (K, N) int8.
+
+    scale: (N,) if scale_axis == "n" else (K,). Pre-padded shapes required.
+    """
+    m, k = x.shape
+    k2, n = wq.shape
+    assert k == k2, (x.shape, wq.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    nk_steps = k // bk
+    grid = (m // bm, n // bn, nk_steps)
+
+    if scale_axis == "n":
+        assert scale.shape == (n,), (scale.shape, n)
+        scale2d = scale.reshape(1, n).astype(jnp.float32)
+        kern = functools.partial(_dequant_kernel_n, nk_steps=nk_steps)
+        scale_spec = pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    elif scale_axis == "k":
+        assert scale.shape == (k,), (scale.shape, k)
+        scale2d = scale.reshape(1, k).astype(jnp.float32)
+        kern = functools.partial(_dequant_kernel_k, nk_steps=nk_steps)
+        scale_spec = pl.BlockSpec((1, bk), lambda i, j, kk: (0, kk))
+    else:
+        raise ValueError(scale_axis)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, wq, scale2d)

@@ -1,0 +1,95 @@
+"""Fused low-rank matmul Pallas TPU kernel: y = (x @ W1) @ W2.
+
+The deployable form of every Dobi-SVD-compressed matrix is a factor pair
+W1 (K, R), W2 (R, N) with R ≪ min(K, N). Running the two matmuls separately
+round-trips the (M, R) intermediate through HBM; this kernel keeps it in a
+VMEM scratch accumulator.
+
+Two-phase sequential grid (TPU grids iterate the last axis fastest):
+
+    grid = (M/bm, nk + nn),  nk = K/bk, nn = N/bn
+
+    phase 1 (j <  nk): acc(bm, R) += x[i, j] @ W1[j]          (MXU, fp32 acc)
+    phase 2 (j >= nk): y[i, j-nk] = acc @ W2[:, j-nk]
+
+Index maps clamp into the valid range during the opposite phase (those loads
+are dead). The y output block for row-block i has a constant index during
+phase 1, so it is flushed only after phase 2 writes it.
+
+VMEM working set (bm=128, bk=512, bn=256, R≤4096, bf16 in / fp32 acc):
+  x tile 128·512·2 = 128 KiB, W1 tile 512·R·2 ≤ 4 MiB, W2 tile R·256·2 ≤ 2 MiB,
+  acc 128·R·4 ≤ 2 MiB, y tile 128 KiB — ≈ 8 MiB ≪ 16 MiB v5e VMEM.
+All tile dims are multiples of (8, 128) for MXU/VREG alignment.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lowrank_kernel(x_ref, w1_ref, w2_ref, y_ref, acc_ref, *, nk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < nk)
+    def _phase1():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w1_ref[...], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(j >= nk)
+    def _phase2():
+        y_ref[...] = jnp.dot(
+            acc_ref[...], w2_ref[...], preferred_element_type=jnp.float32
+        ).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret")
+)
+def lowrank_matmul(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused (x @ W1) @ W2. x: (M, K), w1: (K, R), w2: (R, N) → (M, N).
+
+    Shapes must be pre-padded to multiples of the block sizes (ops.py does
+    this); R is kept whole in VMEM and should be a multiple of 128.
+    """
+    m, k = x.shape
+    k2, r = w1.shape
+    r2, n = w2.shape
+    assert k == k2 and r == r2, (x.shape, w1.shape, w2.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+
+    nk = k // bk
+    nn = n // bn
+    grid = (m // bm, nk + nn)
+
+    return pl.pallas_call(
+        functools.partial(_lowrank_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, jnp.minimum(j, nk - 1))),
+            pl.BlockSpec((bk, r), lambda i, j: (jnp.minimum(j, nk - 1), 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, jnp.maximum(j - nk, 0))),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, jnp.maximum(j - nk, 0))),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w2)

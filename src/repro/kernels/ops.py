@@ -1,0 +1,145 @@
+"""Public wrappers around the Pallas kernels.
+
+Handles (a) shape padding to tile multiples, (b) backend dispatch — the Pallas
+path runs on TPU (or anywhere under `interpret=True` for validation); the
+pure-jnp reference path is the default on CPU so tests/benchmarks stay fast,
+(c) batched inputs (leading dims folded into M).
+
+The serving stack calls these, never pl.pallas_call directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.dequant_matmul import dequant_matmul as _dequant_pallas
+from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _fold_batch(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def lowrank_matmul(
+    x: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 256,
+) -> jnp.ndarray:
+    """y = (x @ W1) @ W2 with any number of leading batch dims on x."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref_lib.lowrank_matmul_ref(x, w1, w2)
+
+    x2, lead = _fold_batch(x)
+    m, k = x2.shape
+    r, n = w2.shape
+    xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    w1p = _pad_to(_pad_to(w1, bk, 0), 128, 1)
+    w2p = _pad_to(_pad_to(w2, 128, 0), bn, 1)
+    yp = _lowrank_pallas(
+        xp, w1p, w2p, bm=bm, bk=bk, bn=bn,
+        interpret=bool(interpret) if interpret is not None else not _on_tpu(),
+    )
+    return yp[:m, :n].reshape(*lead, n)
+
+
+def dequant_matmul(
+    x: jnp.ndarray,
+    wq: jnp.ndarray,
+    scale: jnp.ndarray,
+    *,
+    scale_axis: str = "n",
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bm: int = 128,
+    bk: int = 256,
+    bn: int = 256,
+) -> jnp.ndarray:
+    """y = x @ (wq · scale); wq int8 (K, N)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        if scale_axis == "n":
+            return ref_lib.dequant_matmul_ref(x, wq, scale)
+        w = wq.astype(jnp.float32) * scale[:, None]
+        return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+    x2, lead = _fold_batch(x)
+    m, k = x2.shape
+    n = wq.shape[1]
+    xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    wqp = _pad_to(_pad_to(wq, bk, 0), bn, 1)
+    sp = _pad_to(scale, bn if scale_axis == "n" else bk, 0)
+    yp = _dequant_pallas(
+        xp, wqp, sp, scale_axis=scale_axis, bm=bm, bk=bk, bn=bn,
+        interpret=bool(interpret) if interpret is not None else not _on_tpu(),
+    )
+    return yp[:m, :n].reshape(*lead, n)
+
+
+def quant_lowrank_matmul(
+    x: jnp.ndarray,
+    u8: jnp.ndarray,
+    tail: jnp.ndarray,
+    v8: jnp.ndarray,
+    su: jnp.ndarray,
+    sv: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Full remapped-storage forward (Algorithm 3), both orientations:
+
+      tall (m > n):  t = x[:, :d]@(u8·su) + x[:, d:]@tail ;  y = (t·sv) @ v8ᵀ
+      wide (m < n):  t = x@(u8·su) ; y = [(t·sv) @ v8ᵀ , t @ tailᵀ]
+
+    Composes the dequant kernel so the weight path stays int8 end-to-end.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas:
+        return ref_lib.quant_lowrank_matmul_ref(x, u8, tail, v8, su, sv)
+
+    d = u8.shape[0]
+    m = x.shape[-1]
+    t = dequant_matmul(
+        x[..., :d], u8, su, scale_axis="n",
+        use_pallas=True, interpret=interpret,
+    )
+    if m > d and tail.shape[0]:
+        t = t + x[..., d:].astype(jnp.float32) @ tail.astype(jnp.float32)
+    # y_low = (t · sv) @ v8ᵀ — int8 rhs with per-contraction scales.
+    y = dequant_matmul(
+        t.astype(x.dtype), jnp.swapaxes(v8, 0, 1), sv, scale_axis="k",
+        use_pallas=True, interpret=interpret,
+    )
+    if m <= d and tail.shape[0]:     # wide: V tail columns at bf16
+        y_hi = t.astype(jnp.float32) @ jnp.swapaxes(tail, 0, 1).astype(jnp.float32)
+        y = jnp.concatenate([y, y_hi.astype(y.dtype)], axis=-1)
+    return y.astype(x.dtype)

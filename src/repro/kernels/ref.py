@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose against these."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lowrank_matmul_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """y = (x @ W1) @ W2 in fp32 accumulation, output in x.dtype."""
+    t = x.astype(jnp.float32) @ w1.astype(jnp.float32)
+    return (t @ w2.astype(jnp.float32)).astype(x.dtype)
+
+
+def dequant_matmul_ref(
+    x: jnp.ndarray, wq: jnp.ndarray, scale: jnp.ndarray
+) -> jnp.ndarray:
+    """y = x @ (wq · scale), wq int8 (K, N), scale fp32 (N,) per-column."""
+    w = wq.astype(jnp.float32) * scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quant_lowrank_matmul_ref(
+    x: jnp.ndarray,
+    u8: jnp.ndarray,      # (d, k) int8 — first d=min(m,n) rows of W1 = ŨΣ
+    tail: jnp.ndarray,    # (|m−n|, k) bf16 — taller factor's remaining rows
+    v8: jnp.ndarray,      # (d, k) int8 — first d rows of V (W2 = Vᵀ)
+    su: jnp.ndarray,      # (k,)
+    sv: jnp.ndarray,      # (k,)
+) -> jnp.ndarray:
+    """Remapped-storage forward y = (x @ W1) @ W2 (Algorithm 3, both
+    orientations — tall m>n: tail rows belong to U; wide m<n: tail → V)."""
+    d = u8.shape[0]
+    m = x.shape[-1]
+    x32 = x.astype(jnp.float32)
+    t = x32[..., :d] @ (u8.astype(jnp.float32) * su[None, :])
+    v = v8.astype(jnp.float32) * sv[None, :]
+    if m > d:        # tall-U
+        t = t + x32[..., d:] @ tail.astype(jnp.float32)
+    elif tail.shape[0]:  # wide: V carries the tail
+        v = jnp.concatenate([v, tail.astype(jnp.float32)], axis=0)
+    return (t @ v.T).astype(x.dtype)

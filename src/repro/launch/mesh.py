@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Target hardware: TPU v5e, 256 chips per pod (16×16), ICI-connected within a
+pod; the multi-pod mesh adds a leading "pod" axis (2 pods = 512 chips, DCN
+between pods). Functions, not module-level constants — importing this module
+never touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host (CPU) devices for tests."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )
+
+
+# v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link (~4 links usable per chip in 2D torus)

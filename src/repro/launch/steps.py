@@ -1,0 +1,203 @@
+"""Step builders: train / prefill / serve steps with explicit shardings.
+
+`build_step(cfg, shape, mesh)` assembles the jit-able function plus the
+ShapeDtypeStruct arguments and their NamedShardings for one dry-run cell (and
+the same builders drive the real train/serve loops at host scale).
+
+Sharding summary (rules in parallel/sharding.py):
+  params/opt — TP over "model" (heads/d_ff/vocab), FSDP over "data";
+  batch      — leading dim over ("pod","data") when divisible;
+  caches     — batch→data, heads→"model"; long-context batch-1 decode shards
+               the KV sequence dim over "data" (sequence parallelism).
+
+Memory policy at scale: models > ~40B params default to bf16 optimizer state
+without a master copy (update math still fp32); smaller models keep fp32
+state + master. Both are config-overridable.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build as build_model
+from repro.models.compression import compressed_param_specs
+from repro.parallel import sharding as shardlib
+from repro.parallel.sharding import activation_sharding
+from repro.roofline.hlo import param_count
+
+
+@dataclass
+class StepBuild:
+    fn: Callable
+    args: tuple                      # ShapeDtypeStructs (dry-run) or arrays
+    in_shardings: tuple
+    mesh: Mesh
+    donate: tuple = ()
+
+    def lower(self):
+        fn, mesh = self.fn, self.mesh
+
+        def with_ctx(*a):
+            with activation_sharding(mesh):
+                return fn(*a)
+
+        with mesh:
+            jitted = jax.jit(
+                with_ctx, in_shardings=self.in_shardings,
+                donate_argnums=self.donate,
+            )
+            return jitted.lower(*self.args)
+
+
+def _adamw_cfg(cfg: ModelConfig) -> optim.AdamWConfig:
+    big = param_count(cfg) > 40e9
+    return optim.AdamWConfig(
+        master_dtype="" if big else "float32",
+        state_dtype="bfloat16" if big else "float32",
+    )
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig | None = None,
+                    *, vocab_parallel_mesh: Mesh | None = None):
+    bundle = build_model(cfg)
+    ocfg = ocfg or _adamw_cfg(cfg)
+    micro = cfg.train_microbatch
+
+    loss_fn = bundle.loss
+    if vocab_parallel_mesh is not None and cfg.family not in ("audio",):
+        # §Perf: shard_map vocab-parallel CE — the (B,S,V) logits tensor only
+        # ever exists as a (B_loc, S, V_loc) shard (decisive for 262k vocabs)
+        from repro.models import transformer as _tfm
+        from repro.parallel.collectives import vocab_parallel_ce
+
+        def loss_fn(params, batch):
+            hidden, aux = _tfm.forward(
+                params, batch["tokens"], cfg,
+                prefix_embeds=batch.get("prefix_embeds"), return_hidden=True)
+            if batch.get("prefix_embeds") is not None:
+                hidden = hidden[:, batch["prefix_embeds"].shape[1]:]
+            targets = batch["targets"]
+            mask = batch.get("mask")
+            if mask is None:
+                mask = jnp.ones(targets.shape, jnp.float32)
+            ce = vocab_parallel_ce(hidden, params["lm_head"], targets, mask,
+                                   vocab_parallel_mesh)
+            return ce + 0.01 * aux
+
+    def train_step(params, opt_state, batch):
+        if micro <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # gradient accumulation: scan over micro-slices of the batch;
+            # activation memory scales 1/micro, grads accumulate in fp32
+            def reshape(x):
+                b = x.shape[0]
+                assert b % micro == 0, (b, micro)
+                return x.reshape(micro, b // micro, *x.shape[1:])
+
+            micro_batches = jax.tree.map(reshape, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (g_sum, l_sum), _ = jax.lax.scan(body, (g0, 0.0), micro_batches)
+            grads = jax.tree.map(lambda g: g / micro, g_sum)
+            loss = l_sum / micro
+        new_params, new_state = optim.update(grads, opt_state, params, ocfg)
+        return new_params, new_state, loss
+
+    return bundle, train_step, ocfg
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    compressed: bool = False,
+    compress_ratio: float = 0.4,
+    compress_quantized: bool = False,
+    kv_cache_dtype=None,          # e.g. jnp.float8_e4m3fn (hillclimb knob)
+    ep: bool = False,             # expert-parallel sharding for MoE
+    vocab_parallel_ce_opt: bool = False,
+) -> StepBuild:
+    bundle = build_model(cfg)
+    param_spec_tree = bundle.param_specs()
+    if compressed:
+        param_spec_tree = compressed_param_specs(
+            param_spec_tree, cfg, compress_ratio, quantize=compress_quantized)
+    pspecs = shardlib.param_specs(param_spec_tree, ep=ep)
+    pshard = shardlib.make_sharding(mesh, pspecs)
+
+    if shape.kind == "train":
+        bundle2, train_step, ocfg = make_train_step(
+            cfg, vocab_parallel_mesh=mesh if vocab_parallel_ce_opt else None)
+        opt_spec_tree = jax.eval_shape(lambda p: optim.init(p, ocfg), param_spec_tree)
+        ospecs = shardlib.param_specs(opt_spec_tree)
+        oshard = shardlib.make_sharding(mesh, ospecs)
+        batch = bundle.input_specs(shape)
+        bshard = shardlib.make_sharding(mesh, shardlib.batch_spec(batch, mesh))
+        return StepBuild(
+            fn=train_step,
+            args=(param_spec_tree, opt_spec_tree, batch),
+            in_shardings=(pshard, oshard, bshard),
+            mesh=mesh,
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch = bundle.input_specs(shape)
+        bshard = shardlib.make_sharding(mesh, shardlib.batch_spec(batch, mesh))
+        cache = bundle.cache_specs(shape.global_batch, shape.seq_len)
+        cspecs = shardlib.cache_spec(cache, mesh, cfg)
+        cshard = shardlib.make_sharding(mesh, cspecs)
+
+        def prefill_step(params, batch, cache):
+            return bundle.prefill(params, batch, cache)
+
+        return StepBuild(
+            fn=prefill_step,
+            args=(param_spec_tree, batch, cache),
+            in_shardings=(pshard, bshard, cshard),
+            mesh=mesh,
+            donate=(2,),
+        )
+
+    # decode
+    b = shape.global_batch
+    dp_total = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp_total *= mesh.shape[a]
+    seq_shard = b < dp_total                       # batch can't cover data axes
+    cache = bundle.cache_specs(b, shape.seq_len,
+                               dtype=kv_cache_dtype or jnp.bfloat16)
+    cspecs = shardlib.cache_spec(cache, mesh, cfg, seq_shard=seq_shard)
+    cshard = shardlib.make_sharding(mesh, cspecs)
+    token = bundle.input_specs(shape)["token"]
+    tshard = shardlib.make_sharding(mesh, shardlib.batch_spec(token, mesh))
+    length = jax.ShapeDtypeStruct((), jnp.int32)
+    lshard = NamedSharding(mesh, P())
+
+    def serve_step(params, token, cache, length):
+        return bundle.decode_step(params, token, cache, length)
+
+    return StepBuild(
+        fn=serve_step,
+        args=(param_spec_tree, token, cache, length),
+        in_shardings=(pshard, tshard, cshard, lshard),
+        mesh=mesh,
+        donate=(2,),
+    )

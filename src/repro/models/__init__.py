@@ -1,0 +1,4 @@
+"""Model definitions: transformer LM (dense/moe/ssm/hybrid/vlm), enc-dec, and
+the Dobi-SVD model-integration layer."""
+
+from repro.models.api import ModelBundle, build

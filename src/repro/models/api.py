@@ -1,0 +1,150 @@
+"""Public model API: one bundle per architecture config.
+
+`build(cfg)` returns a ModelBundle exposing:
+  * init(rng) → params
+  * loss(params, batch) → scalar                    (training objective)
+  * forward / prefill / decode_step                 (family-dispatched)
+  * input_specs(shape) → batch of ShapeDtypeStructs (dry-run stand-ins,
+    weak-type-correct, shardable, no device allocation)
+  * cache_specs(batch, max_len) → cache pytree of ShapeDtypeStructs
+  * param_specs(rng) → params pytree of ShapeDtypeStructs
+
+The modality frontends of [vlm]/[audio] archs are STUBS per the assignment:
+`input_specs` provides precomputed patch/frame embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable                      # (params, batch) -> scalar
+    forward: Callable
+    prefill: Callable                   # (params, batch, cache) -> (logits, cache)
+    decode_step: Callable               # (params, token, cache, length) -> (logits, cache)
+    init_cache: Callable                # (params, batch, max_len, dtype) -> cache
+
+    # ---- dry-run specs ----------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            batch: dict[str, Any] = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.family == "vlm":
+                batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                    (b, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16
+                )
+            if cfg.family == "audio":
+                batch = {
+                    "frames": jax.ShapeDtypeStruct(
+                        (b, cfg.max_source_positions, cfg.d_model), jnp.bfloat16
+                    ),
+                    "tokens": jax.ShapeDtypeStruct((b, min(s, cfg.max_seq_len)), i32),
+                    "targets": jax.ShapeDtypeStruct((b, min(s, cfg.max_seq_len)), i32),
+                }
+            return batch
+        # decode: one new token against a seq_len-deep cache
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+    def param_specs(self) -> Any:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def cache_specs(self, batch: int, max_len: int, dtype=jnp.bfloat16) -> Any:
+        params_spec = self.param_specs()
+        return jax.eval_shape(
+            lambda p: self.init_cache(p, batch, max_len, dtype), params_spec
+        )
+
+
+def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
+    def loss(params, batch):
+        return tfm.lm_loss(params, batch, cfg)
+
+    def fwd(params, batch):
+        return tfm.forward(params, batch["tokens"], cfg,
+                           prefix_embeds=batch.get("prefix_embeds"))
+
+    def prefill(params, batch, cache):
+        return tfm.prefill(params, batch["tokens"], cfg, cache,
+                           prefix_embeds=batch.get("prefix_embeds"))
+
+    def decode(params, token, cache, length):
+        return tfm.decode_step(params, token, cfg, cache, length)
+
+    def init_cache(params, batch, max_len, dtype=jnp.bfloat16):
+        return tfm.init_cache(params, cfg, batch, max_len, dtype)
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(_init_lm, cfg),
+        loss=loss, forward=fwd, prefill=prefill, decode_step=decode,
+        init_cache=init_cache,
+    )
+
+
+def _init_lm(cfg, rng):
+    return tfm.init_params(rng, cfg)
+
+
+def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
+    def loss(params, batch):
+        return encdec_lib.encdec_loss(params, batch, cfg)
+
+    def fwd(params, batch):
+        return encdec_lib.forward_encdec(params, batch["frames"], batch["tokens"], cfg), 0.0
+
+    def prefill(params, batch, cache):
+        # enc-dec "prefill" = encode + teacher-forced decode of the prompt
+        enc_out, cache = encdec_lib.build_serving_cache(
+            params, batch["frames"], cfg, batch["tokens"].shape[0],
+            max_len=cache_max_len_of(cache),
+        )
+        logits = encdec_lib.forward_encdec(params, batch["frames"], batch["tokens"], cfg)
+        return logits[:, -1], cache
+
+    def decode(params, token, cache, length):
+        return encdec_lib.decode_step_encdec(params, token, cfg, cache, length)
+
+    def init_cache(params, batch, max_len, dtype=jnp.bfloat16):
+        frames = jnp.zeros((batch, cfg.max_source_positions, cfg.d_model), dtype)
+        _, cache = encdec_lib.build_serving_cache(params, frames, cfg, batch, max_len, dtype)
+        return cache
+
+    return ModelBundle(
+        cfg=cfg,
+        init=functools.partial(_init_encdec, cfg),
+        loss=loss, forward=fwd, prefill=prefill, decode_step=decode,
+        init_cache=init_cache,
+    )
+
+
+def cache_max_len_of(cache) -> int:
+    leaves = jax.tree.leaves(cache)
+    return max(l.shape[1] if l.ndim > 1 else 0 for l in leaves)
+
+
+def _init_encdec(cfg, rng):
+    return encdec_lib.init_encdec_params(rng, cfg)
+
+
+def build(cfg: ModelConfig) -> ModelBundle:
+    if cfg.is_encoder_decoder or cfg.family == "audio":
+        return _encdec_bundle(cfg)
+    return _lm_bundle(cfg)

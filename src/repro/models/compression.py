@@ -1,0 +1,601 @@
+"""Model-level Dobi-SVD integration.
+
+Three entry points:
+
+  * `collect_calibration`   — run calibration batches through an *unrolled*
+    layer loop that mirrors apply_block exactly, recording the input of every
+    eligible linear (tests assert the mirrored forward equals the scanned
+    forward bit-for-bit at fp32);
+
+  * `compress_model_params` — the full paper pipeline on a model pytree:
+    IPCA activation bases → rank plan (trained-k or energy waterfill) →
+    W̃ = W V_k V_kᵀ → factored ({"w1","w2"}) or remapped ({"u8",...}) leaves,
+    ranks zero-padded per stack so scan still works;
+
+  * `build_rank_train_loss` — the differentiable-truncation training loss
+    (paper Algorithm 1): every eligible linear computes A = xW, soft-truncates
+    the singular values of A with its learnable θ (stabilized SVD VJP), and
+    the truncated activations propagate. Used at proxy scale (unrolled).
+
+Eligible matrices: attention wq/wk/wv/wo, MLP gate/up/down, MoE expert
+gate/up/down (per expert), mamba in_proj/out_proj. Embeddings / router / norms
+are excluded (paper compresses transformer-block matrices only).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import svd_module as svd_lib
+from repro.core import ipca as ipca_lib
+from repro.core import lowrank as lowrank_lib
+from repro.core import planner as planner_lib
+from repro.core import remap as remap_lib
+from repro.core import truncation as trunc_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.transformer import plan_structure, _norm
+
+
+# ---------------------------------------------------------------------------
+# Unrolled mirrored forward with per-linear hooks
+# ---------------------------------------------------------------------------
+
+def _unstack(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def iter_blocks(params: dict, cfg: ModelConfig):
+    """Yield (layer_name, kind, window, block_params) in execution order."""
+    plan = plan_structure(cfg)
+    w = cfg.sliding_window
+    if plan["template"] == "uniform":
+        for i in range(plan["layers"]):
+            yield f"layer{i}", plan["kind"], w, _unstack(params["blocks"], i)
+    elif plan["template"] == "gemma":
+        g, lpg = plan["groups"], plan["local_per_group"]
+        n = 0
+        for gi in range(g):
+            for li in range(lpg):
+                yield f"layer{n}", "dense", w, _unstack(params["local_blocks"], (gi, li))
+                n += 1
+            yield f"layer{n}", "dense", 0, _unstack(params["global_blocks"], gi)
+            n += 1
+        for ri in range(plan["rem"]):
+            yield f"layer{n}", "dense", w, _unstack(params["rem_blocks"], ri)
+            n += 1
+    else:  # zamba
+        g, pg = plan["groups"], plan["per_group"]
+        n = 0
+        for gi in range(g):
+            for li in range(pg):
+                yield f"layer{n}", "mamba", 0, _unstack(params["mamba_blocks"], (gi, li))
+                n += 1
+            yield f"shared_attn@{gi}", "dense", w, params["shared_attn"]
+        for ri in range(plan["rem"]):
+            yield f"layer{n}", "mamba", 0, _unstack(params["rem_mamba"], ri)
+            n += 1
+
+
+def _idx(tree, idx):
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+LinearFn = Callable[[str, Any, jnp.ndarray], jnp.ndarray]
+
+
+def _default_linear(name: str, p, x):
+    return L.apply_linear(p, x)
+
+
+def _block_forward(
+    blk, x, cfg: ModelConfig, kind: str, *, window: int, lname: str,
+    linear: LinearFn = _default_linear,
+) -> jnp.ndarray:
+    """Mirror of transformer.apply_block with a pluggable linear executor."""
+    if kind == "mamba":
+        h = _mamba_forward(blk["mamba"], _norm(cfg, blk["ln1"], x), cfg,
+                           lname=lname, linear=linear)
+        return x + h
+
+    y = _norm(cfg, blk["ln1"], x)
+    b, s, _ = y.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = linear(f"{lname}.wq", blk["attn"]["wq"], y).reshape(b, s, h, hd)
+    k = linear(f"{lname}.wk", blk["attn"]["wk"], y).reshape(b, s, kvh, hd)
+    v = linear(f"{lname}.wv", blk["attn"]["wv"], y).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(blk["attn"]["q_norm"], q)
+        k = L.rmsnorm(blk["attn"]["k_norm"], k)
+    cos, sin = L.rope_frequencies(hd, cfg.rope_theta, jnp.arange(s))
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    ao = L.full_attention(q, k, v, causal=True, window=window).reshape(b, s, -1)
+    x = x + linear(f"{lname}.wo", blk["attn"]["wo"], ao)
+
+    y = _norm(cfg, blk["ln2"], x)
+    if kind == "moe":
+        out = _moe_forward(blk["moe"], y.reshape(b * s, -1), cfg, lname=lname, linear=linear)
+        return x + out.reshape(b, s, -1)
+    g = linear(f"{lname}.gate", blk["mlp"]["gate"], y)
+    u = linear(f"{lname}.up", blk["mlp"]["up"], y)
+    hmid = (jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)) * u
+    return x + linear(f"{lname}.down", blk["mlp"]["down"], hmid)
+
+
+def _moe_forward(p, x, cfg: ModelConfig, *, lname: str, linear: LinearFn):
+    """Mirror of moe.apply_moe exposing per-expert matmuls to the hook."""
+    t, d = x.shape
+    e = p["router"].shape[1]
+    top_k = cfg.num_experts_per_tok
+    capacity = max(1, int(t * top_k * cfg.moe_capacity_factor / e))
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    flat_expert = experts.reshape(-1)
+    flat_gate = gates.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert, sorted_token, sorted_gate = (
+        flat_expert[order], flat_token[order], flat_gate[order])
+    counts = jnp.bincount(flat_expert, length=e)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    slot = jnp.arange(t * top_k) - starts[sorted_expert]
+    keep = slot < capacity
+    slot = jnp.where(keep, slot, 0)
+    buf_idx = sorted_expert * capacity + slot
+    xbuf = jnp.zeros((e * capacity, d), x.dtype).at[buf_idx].add(
+        jnp.where(keep[:, None], x[sorted_token], 0)
+    ).reshape(e, capacity, d)
+
+    outs = []
+    for j in range(e):
+        gj = linear(f"{lname}.expert{j}.gate", _idx(p["gate"], j), xbuf[j])
+        uj = linear(f"{lname}.expert{j}.up", _idx(p["up"], j), xbuf[j])
+        hj = (jax.nn.silu(gj) if cfg.act == "silu" else jax.nn.gelu(gj)) * uj
+        outs.append(linear(f"{lname}.expert{j}.down", _idx(p["down"], j), hj))
+    ybuf = jnp.stack(outs).reshape(e * capacity, d)
+    y_tok = ybuf[buf_idx] * (sorted_gate * keep)[:, None]
+    return jnp.zeros((t, d), x.dtype).at[sorted_token].add(y_tok.astype(x.dtype))
+
+
+def _mamba_forward(p, x, cfg: ModelConfig, *, lname: str, linear: LinearFn):
+    """Mirror of ssm.apply_mamba exposing in/out projections to the hook."""
+    bsz, s, _ = x.shape
+    d_inner = p["norm"].shape[0]
+    d_state = cfg.ssm_state
+    nheads = p["a_log"].shape[0]
+    zxbcdt = linear(f"{lname}.in_proj", p["in_proj"], x)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * d_state]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    xbc = ssm_lib._causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner: d_inner + d_state].astype(jnp.float32)
+    c_in = xbc[..., d_inner + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, s, nheads, cfg.ssm_headdim).astype(jnp.float32)
+    y, _ = ssm_lib.ssd_chunked(xh, dt, a, b_in, c_in, chunk=cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    return linear(f"{lname}.out_proj", p["out_proj"], y)
+
+
+def mirrored_forward(
+    params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+    linear: LinearFn = _default_linear,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Unrolled forward identical to transformer.forward (modulo scan)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = x * math.sqrt(cfg.d_model)
+    for lname, kind, window, blk in iter_blocks(params, cfg):
+        x = _block_forward(blk, x, cfg, kind, window=window, lname=lname, linear=linear)
+    x = L.rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        return x @ params["embed"].T.astype(x.dtype)
+    return L.apply_linear(head, x)
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CalibRecord:
+    weight: jnp.ndarray             # dense (d_in, d_out)
+    ipca: ipca_lib.IPCAState | None = None
+    spectrum: np.ndarray | None = None
+    n_batches: int = 0
+
+
+def collect_calibration(
+    params: dict,
+    cfg: ModelConfig,
+    token_batches: list[jnp.ndarray],
+    *,
+    max_rank: int | dict[str, int] | None = None,
+    spectra_only: bool = False,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> dict[str, CalibRecord]:
+    """Stream calibration batches; IPCA the activation bases per matrix.
+
+    IMPORTANT (paper Algorithm 2): the per-batch bases MUST be truncated at
+    (roughly) the target rank before IPCA — stacking *complete* orthonormal
+    bases has an isotropic Gram (B·I) and the principal subspace becomes
+    arbitrary. `max_rank` is an int or a per-matrix dict (usually the planned
+    k); compress_model_params runs two passes: spectra → plan → capped IPCA.
+    """
+    records: dict[str, CalibRecord] = {}
+
+    def cap_for(name, w, tokens_n):
+        if isinstance(max_rank, dict):
+            cap = max_rank.get(name, min(w.shape))
+        else:
+            cap = max_rank or max(min(w.shape) // 2, 1)
+        return max(1, min(cap, min(w.shape), tokens_n))
+
+    for tokens in token_batches:
+        captured: dict[str, jnp.ndarray] = {}
+
+        def linear(name, p, x):
+            captured[name] = x.reshape(-1, x.shape[-1])
+            return L.apply_linear(p, x)
+
+        mirrored_forward(params, tokens, cfg, linear=linear, prefix_embeds=prefix_embeds)
+
+        for name, xin in captured.items():
+            w = _find_weight(params, cfg, name)
+            if not isinstance(w, jnp.ndarray):
+                continue
+            a = xin.astype(jnp.float32) @ w.astype(jnp.float32)
+            rec = records.get(name)
+            if spectra_only:
+                s = jnp.linalg.svd(a, compute_uv=False)
+                if rec is None:
+                    rec = CalibRecord(weight=w)
+                    rec.spectrum = np.zeros((min(a.shape),), np.float64)
+                    records[name] = rec
+                spec = np.asarray(s, np.float64)
+                rec.spectrum[: len(spec)] += spec
+                rec.n_batches += 1
+                continue
+            r_cap = cap_for(name, w, xin.shape[0])
+            u, s, v = svd_lib.svd(a)
+            if rec is None:
+                rec = CalibRecord(weight=w, ipca=ipca_lib.ipca_init(w.shape[1], r_cap))
+                rec.spectrum = np.zeros((min(a.shape),), np.float64)
+                records[name] = rec
+            rec.ipca = ipca_lib.ipca_update(rec.ipca, v[:, :r_cap])
+            spec = np.asarray(s, np.float64)
+            rec.spectrum[: len(spec)] += spec
+            rec.n_batches += 1
+    for rec in records.values():
+        rec.spectrum = rec.spectrum / max(rec.n_batches, 1)
+    return records
+
+
+_MOE_RE = re.compile(r"(.+)\.expert(\d+)\.(gate|up|down)$")
+
+
+def _find_weight(params: dict, cfg: ModelConfig, name: str):
+    """Resolve a recorded linear name back to its dense weight leaf."""
+    lname, _, leaf = name.rpartition(".")
+    m = _MOE_RE.match(name)
+    if m:
+        lname, expert, leaf = m.group(1), int(m.group(2)), m.group(3)
+    for bname, kind, window, blk in iter_blocks(params, cfg):
+        if bname != lname:
+            continue
+        if m:
+            return _idx(blk["moe"][leaf], expert)
+        if leaf in ("wq", "wk", "wv", "wo"):
+            return blk["attn"][leaf]
+        if leaf in ("gate", "up", "down"):
+            return blk["mlp"][leaf]
+        if leaf in ("in_proj", "out_proj"):
+            return blk["mamba"][leaf]
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model compression
+# ---------------------------------------------------------------------------
+
+def compress_model_params(
+    params: dict,
+    cfg: ModelConfig,
+    token_batches: list[jnp.ndarray],
+    target_ratio: float,
+    *,
+    method: str = "dobi",            # dobi | dobi_noremap
+    trained_soft_ks: dict[str, float] | None = None,
+    quantize: bool | None = None,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> tuple[dict, dict[str, int]]:
+    """Returns (new params pytree with factored/remapped leaves, rank map)."""
+    remap = method == "dobi"
+    if quantize is None:
+        quantize = remap and cfg.compress_quant
+    # pass 1: spectra only (cheap) → integer rank plan
+    spec_records = collect_calibration(
+        params, cfg, token_batches, spectra_only=True, prefix_embeds=prefix_embeds)
+    names = sorted(spec_records.keys())
+    specs = [
+        planner_lib.MatrixSpec(nm, int(spec_records[nm].weight.shape[0]),
+                               int(spec_records[nm].weight.shape[1]))
+        for nm in names
+    ]
+    if trained_soft_ks is not None:
+        ks = planner_lib.plan_from_trained_k(
+            specs, [trained_soft_ks[nm] for nm in names], target_ratio, remap=remap
+        )
+    else:
+        ks = planner_lib.plan_energy_waterfill(
+            specs, [spec_records[nm].spectrum for nm in names], target_ratio, remap=remap
+        )
+    kmap = dict(zip(names, ks))
+    # pass 2: IPCA with per-batch bases truncated at the planned k (Algo 2)
+    records = collect_calibration(
+        params, cfg, token_batches, max_rank=kmap, prefix_embeds=prefix_embeds)
+
+    # per-matrix factors
+    factors: dict[str, Any] = {}
+    for nm in names:
+        rec = records[nm]
+        k = kmap[nm]
+        v_full = rec.ipca.components
+        v_k = v_full[:, :k]
+        if quantize:
+            w_tilde = ipca_lib.update_weight(rec.weight.astype(jnp.float32), v_k)
+            rw = remap_lib.remap_compress(w_tilde, k)
+            factors[nm] = {"u8": rw.u8, "v8": rw.v8, "tail": rw.tail,
+                           "su": rw.su, "sv": rw.sv}
+        else:
+            f = lowrank_lib.lowrank_from_basis(rec.weight, v_k)
+            factors[nm] = {"w1": f.w1, "w2": f.w2}
+
+    new_params = _rebuild_params(params, cfg, factors, kmap, quantize)
+    return new_params, kmap
+
+
+def _pad_rank(arr: jnp.ndarray, axis: int, k_pad: int) -> jnp.ndarray:
+    pad = k_pad - arr.shape[axis]
+    if pad <= 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
+def _rebuild_params(params, cfg, factors, kmap, quantize):
+    """Swap dense leaves for factored dicts, restacking per template."""
+    leaf_sets = {
+        "dense": ["wq", "wk", "wv", "wo", "gate", "up", "down"],
+        "moe": ["wq", "wk", "wv", "wo"],
+        "mamba": ["in_proj", "out_proj"],
+    }
+
+    def compress_block(blk, lname, kind):
+        blk = dict(blk)
+        def get(leaf):
+            return factors.get(f"{lname}.{leaf}")
+        if kind == "mamba":
+            blk["mamba"] = dict(blk["mamba"])
+            for leaf in ("in_proj", "out_proj"):
+                f = get(leaf)
+                if f is not None:
+                    blk["mamba"][leaf] = f
+            return blk
+        blk["attn"] = dict(blk["attn"])
+        for leaf in ("wq", "wk", "wv", "wo"):
+            f = get(leaf)
+            if f is not None:
+                blk["attn"][leaf] = f
+        if kind == "moe":
+            e = blk["moe"]["router"].shape[1]
+            blk["moe"] = dict(blk["moe"])
+            for leaf in ("gate", "up", "down"):
+                fs = [factors.get(f"{lname}.expert{j}.{leaf}") for j in range(e)]
+                if all(f is not None and "w1" in f for f in fs):
+                    kmax = max(f["w1"].shape[1] for f in fs)
+                    w1 = jnp.stack([_pad_rank(f["w1"], 1, kmax) for f in fs])
+                    w2 = jnp.stack([_pad_rank(f["w2"], 0, kmax) for f in fs])
+                    blk["moe"][leaf] = {"w1": w1, "w2": w2}
+        else:
+            blk["mlp"] = dict(blk["mlp"])
+            for leaf in ("gate", "up", "down"):
+                f = get(leaf)
+                if f is not None:
+                    blk["mlp"][leaf] = f
+        return blk
+
+    # Collect compressed blocks in execution order, then restack per template.
+    plan = plan_structure(cfg)
+    blocks = [
+        (lname, kind, compress_block(blk, lname, kind))
+        for lname, kind, _, blk in iter_blocks(params, cfg)
+        if not lname.startswith("shared_attn")
+    ]
+    new_params = dict(params)
+
+    def restack(blist, group_shape=None):
+        """Stack a list of block pytrees, zero-padding rank dims to the max."""
+        def stack_leaves(*leaves):
+            if all(isinstance(l, jnp.ndarray) for l in leaves):
+                # pad factored ranks: detect mismatching dims
+                shapes = {l.shape for l in leaves}
+                if len(shapes) > 1:
+                    kmax = max(l.shape for l in leaves)
+                    padded = []
+                    for l in leaves:
+                        for ax in range(l.ndim):
+                            if l.shape[ax] < kmax[ax]:
+                                l = _pad_rank(l, ax, kmax[ax])
+                        padded.append(l)
+                    leaves = padded
+                out = jnp.stack(leaves)
+                if group_shape:
+                    out = out.reshape(*group_shape, *out.shape[1:])
+                return out
+            raise TypeError(type(leaves[0]))
+        return jax.tree.map(stack_leaves, *blist)
+
+    if plan["template"] == "uniform":
+        new_params["blocks"] = restack([b for _, _, b in blocks])
+    elif plan["template"] == "gemma":
+        g, lpg = plan["groups"], plan["local_per_group"]
+        per = lpg + 1
+        local, glob, rem = [], [], []
+        for i, (_, _, b) in enumerate(blocks):
+            if i < g * per:
+                (glob if (i % per) == lpg else local).append(b)
+            else:
+                rem.append(b)
+        new_params["local_blocks"] = restack(local, group_shape=(g, lpg))
+        new_params["global_blocks"] = restack(glob)
+        if rem:
+            new_params["rem_blocks"] = restack(rem)
+    else:  # zamba — mamba stacks (+ shared attn compressed from its own records)
+        g, pg = plan["groups"], plan["per_group"]
+        mam = [b for _, kind, b in blocks if kind == "mamba"]
+        new_params["mamba_blocks"] = restack(mam[: g * pg], group_shape=(g, pg))
+        if len(mam) > g * pg:
+            new_params["rem_mamba"] = restack(mam[g * pg:])
+        shared = [blk for lname, kind, _, blk in iter_blocks(params, cfg)
+                  if lname.startswith("shared_attn")]
+        if shared and f"shared_attn@0.wq" in factors:
+            new_params["shared_attn"] = compress_block(
+                params["shared_attn"], "shared_attn@0", "dense"
+            )
+    return new_params
+
+
+# ---------------------------------------------------------------------------
+# Differentiable rank training (paper Algorithm 1 at model level)
+# ---------------------------------------------------------------------------
+
+def eligible_matrix_shapes(params: dict, cfg: ModelConfig) -> dict[str, tuple[int, int]]:
+    shapes: dict[str, tuple[int, int]] = {}
+
+    def linear(name, p, x):
+        if isinstance(p, jnp.ndarray):
+            shapes[name] = (int(p.shape[0]), int(p.shape[1]))
+        return L.apply_linear(p, x)
+
+    dummy = jnp.zeros((1, 4), jnp.int32)
+    mirrored_forward(params, dummy, cfg, linear=linear)
+    return shapes
+
+
+def build_rank_train_loss(
+    params: dict,
+    cfg: ModelConfig,
+    names: list[str],
+    *,
+    beta: float = 10.0,
+    svd_rank_cap: int | None = None,
+):
+    """Returns loss_fn(thetas (N,), batch) for core.rank_training.train_ranks.
+
+    Each eligible linear computes A = xW, runs the (low-rank) stabilized SVD,
+    applies T(σ; k)=σ·(0.5·tanh(β(k−i))+0.5) with k = r_max·σ(θ), reconstructs
+    A, and propagates. Weights are frozen; only θ receives gradients.
+    """
+    idx = {nm: i for i, nm in enumerate(names)}
+
+    def loss_fn(thetas, batch):
+        def linear(name, p, x):
+            a = L.apply_linear(p, x)
+            if name not in idx or not isinstance(p, jnp.ndarray):
+                return a
+            shape = a.shape
+            a2 = a.reshape(-1, shape[-1]).astype(jnp.float32)
+            r_full = min(a2.shape)
+            r = min(svd_rank_cap or r_full, r_full)
+            if r == r_full:
+                u, s, v = svd_lib.svd(a2)
+            else:
+                u, s, v = svd_lib.lowrank_svd(a2, r)
+            r_max = min(p.shape)
+            k = trunc_lib.theta_to_k(thetas[idx[name]], float(r_max))
+            s_t = trunc_lib.soft_truncate(s, k, beta)
+            a_t = (u * s_t[None, :]) @ v.T
+            return a_t.reshape(shape).astype(a.dtype)
+
+        logits = mirrored_forward(
+            params, batch["tokens"], cfg, linear=linear,
+            prefix_embeds=batch.get("prefix_embeds"),
+        ).astype(jnp.float32)
+        targets = batch["targets"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return (logz - gold).mean()
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Analytic compressed-param specs (dry-run: no weights materialized)
+# ---------------------------------------------------------------------------
+
+_ELIGIBLE = {"wq", "wk", "wv", "wo", "gate", "up", "down", "in_proj", "out_proj"}
+
+
+def _round_rank(k: float, lo: int = 128, mult: int = 128) -> int:
+    k = int(k) // mult * mult
+    return max(lo, k)
+
+
+def compressed_param_specs(param_specs: Any, cfg: ModelConfig, ratio: float,
+                           *, quantize: bool = False) -> Any:
+    """Transform a params ShapeDtypeStruct pytree into its Dobi-SVD-compressed
+    form at `ratio` (remapped bijection k = ratio·m·n/max(m,n), rounded to a
+    multiple of 128 for MXU alignment). Embeddings/norms/router untouched.
+
+    quantize=False → {"w1","w2"} bf16 factor leaves (serving graph);
+    quantize=True  → {"u8","v8","tail","su","sv"} remapped int8 storage.
+    """
+    def visit(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        name = names[-1]
+        if name not in _ELIGIBLE or not hasattr(leaf, "shape"):
+            return leaf
+        if name in ("gate", "up", "down") and "mlp" not in names and "moe" not in names:
+            return leaf
+        m, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+        stack = tuple(int(s) for s in leaf.shape[:-2])
+        k = _round_rank(ratio * m * n / max(m, n))
+        k = min(k, min(m, n))
+        if quantize:
+            d = min(m, n)
+            return {
+                "u8": jax.ShapeDtypeStruct(stack + (d, k), jnp.int8),
+                "v8": jax.ShapeDtypeStruct(stack + (d, k), jnp.int8),
+                "tail": jax.ShapeDtypeStruct(stack + (abs(m - n), k), jnp.bfloat16),
+                "su": jax.ShapeDtypeStruct(stack + (k,), jnp.float32),
+                "sv": jax.ShapeDtypeStruct(stack + (k,), jnp.float32),
+            }
+        dt = leaf.dtype
+        return {
+            "w1": jax.ShapeDtypeStruct(stack + (m, k), dt),
+            "w2": jax.ShapeDtypeStruct(stack + (k, n), dt),
+        }
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_specs)
+    out = [visit(path, leaf) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

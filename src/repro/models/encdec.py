@@ -1,0 +1,195 @@
+"""Whisper-style encoder–decoder (audio family).
+
+The conv frontend is a STUB per the assignment: `input_specs()` supplies
+precomputed frame embeddings (B, T_src, d_model). The transformer backbone is
+real: a non-causal encoder stack and a decoder stack with causal self-attention
++ cross-attention, learned positional embeddings (no RoPE, as in Whisper).
+
+Serving: `encode` runs once per request; cross-attention K/V are computed once
+per layer from the encoder output and cached; decode steps update only the
+self-attention cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import KVCache, init_kv_cache, scan_or_loop
+from repro.parallel.sharding import constrain_batch, constrain_logits
+
+
+def _init_xattn(key, cfg: ModelConfig, dtype):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(k1, d, h * hd, dtype),
+        "wk": L.init_linear(k2, d, kvh * hd, dtype),
+        "wv": L.init_linear(k3, d, kvh * hd, dtype),
+        "wo": L.init_linear(k4, h * hd, d, dtype, scale=1.0 / math.sqrt(h * hd)),
+    }
+
+
+def init_encdec_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    from repro.models.transformer import init_block, _stack_init  # avoid cycle
+
+    enc_layers = cfg.encoder_layers or cfg.num_layers
+    params: dict[str, Any] = {
+        "enc_pos": (jax.random.normal(ks[0], (cfg.max_source_positions, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "enc_blocks": _stack_init(ks[1], enc_layers, lambda k: init_block(k, cfg, "dense", dtype)),
+        "enc_norm": L.init_rmsnorm(cfg.d_model),
+        "embed": (jax.random.normal(ks[2], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "dec_pos": (jax.random.normal(ks[3], (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "dec_blocks": _stack_init(
+            ks[4], cfg.num_layers,
+            lambda k: {
+                **init_block(k, cfg, "dense", dtype),
+                "lnx": L.init_rmsnorm(cfg.d_model),
+                "xattn": _init_xattn(jax.random.fold_in(k, 7), cfg, dtype),
+            },
+        ),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "lm_head": L.init_linear(ks[5], cfg.d_model, cfg.vocab_size, dtype),
+    }
+    return params
+
+
+def _attn_nope(p, x_q, kv_src, cfg: ModelConfig, *, causal: bool) -> jnp.ndarray:
+    """Attention without RoPE (learned positions already added)."""
+    b, sq, _ = x_q.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.apply_linear(p["wq"], x_q).reshape(b, sq, h, hd)
+    k = L.apply_linear(p["wk"], kv_src).reshape(b, -1, kvh, hd)
+    v = L.apply_linear(p["wv"], kv_src).reshape(b, -1, kvh, hd)
+    out = L.full_attention(q, k, v, causal=causal)
+    return L.apply_linear(p["wo"], out.reshape(b, sq, -1))
+
+
+def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, T_src, d_model) stub embeddings → encoder output."""
+    t_src = frames.shape[1]
+    x = constrain_batch(frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None, :t_src])
+
+    def body(h, blk):
+        a = _attn_nope(blk["attn"], L.rmsnorm(blk["ln1"], h), L.rmsnorm(blk["ln1"], h),
+                       cfg, causal=False)
+        h = h + a
+        m = L.apply_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h), cfg.act)
+        return h + m, None
+
+    x, _ = scan_or_loop(body, x, params["enc_blocks"], cfg.scan_layers)
+    return L.rmsnorm(params["enc_norm"], x)
+
+
+def _dec_block(blk, x, enc_out, cfg: ModelConfig) -> jnp.ndarray:
+    a = _attn_nope(blk["attn"], L.rmsnorm(blk["ln1"], x), L.rmsnorm(blk["ln1"], x),
+                   cfg, causal=True)
+    x = x + a
+    c = _attn_nope(blk["xattn"], L.rmsnorm(blk["lnx"], x), enc_out, cfg, causal=False)
+    x = x + c
+    m = L.apply_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], x), cfg.act)
+    return x + m
+
+
+def forward_encdec(
+    params: dict, frames: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Teacher-forced training forward → logits (B, S_dec, V)."""
+    enc_out = encode(params, frames, cfg)
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype)) * math.sqrt(cfg.d_model)
+    x = constrain_batch(x + params["dec_pos"][None, :s])
+
+    def body(h, blk):
+        return _dec_block(blk, h, enc_out, cfg), None
+
+    x, _ = scan_or_loop(body, x, params["dec_blocks"], cfg.scan_layers)
+    x = L.rmsnorm(params["final_norm"], x)
+    return constrain_logits(L.apply_linear(params["lm_head"], x))
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelConfig) -> jnp.ndarray:
+    logits = forward_encdec(params, batch["frames"], batch["tokens"], cfg).astype(jnp.float32)
+    targets = batch["targets"]
+    mask = batch.get("mask", jnp.ones_like(targets, jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return ((logz - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# --- serving ----------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache          # (L, B, S_max, KVH, Dh)
+    cross_k: jnp.ndarray      # (L, B, T_src, KVH, Dh)
+    cross_v: jnp.ndarray
+
+
+def build_serving_cache(
+    params: dict, frames: jnp.ndarray, cfg: ModelConfig, batch: int, max_len: int,
+    dtype=jnp.bfloat16,
+) -> tuple[jnp.ndarray, EncDecCache]:
+    """Encode once; precompute per-layer cross-attention K/V."""
+    enc_out = encode(params, frames, cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    t_src = enc_out.shape[1]
+
+    def xkv(carry, blk):
+        k = L.apply_linear(blk["xattn"]["wk"], enc_out).reshape(batch, t_src, kvh, hd)
+        v = L.apply_linear(blk["xattn"]["wv"], enc_out).reshape(batch, t_src, kvh, hd)
+        return carry, (k.astype(dtype), v.astype(dtype))
+
+    _, (ck, cv) = scan_or_loop(xkv, None, params["dec_blocks"], cfg.scan_layers)
+    n_layers = cfg.num_layers
+    base = init_kv_cache(cfg, batch, max_len, 0, dtype)
+    self_kv = KVCache(
+        k=jnp.broadcast_to(base.k, (n_layers,) + base.k.shape),
+        v=jnp.broadcast_to(base.v, (n_layers,) + base.v.shape),
+    )
+    return enc_out, EncDecCache(self_kv=self_kv, cross_k=ck, cross_v=cv)
+
+
+def decode_step_encdec(
+    params: dict, token: jnp.ndarray, cfg: ModelConfig, cache: EncDecCache, length
+) -> tuple[jnp.ndarray, EncDecCache]:
+    b = token.shape[0]
+    h_heads, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype)) * math.sqrt(cfg.d_model)
+    pos = jnp.asarray(length, jnp.int32)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None, 0][:, None]
+
+    def body(h, xs):
+        blk, kv, ck, cv = xs
+        # self attention (cached, causal)
+        y = L.rmsnorm(blk["ln1"], h)
+        q = L.apply_linear(blk["attn"]["wq"], y).reshape(b, 1, h_heads, hd)
+        kk = L.apply_linear(blk["attn"]["wk"], y).reshape(b, 1, kvh, hd)
+        vv = L.apply_linear(blk["attn"]["wv"], y).reshape(b, 1, kvh, hd)
+        nk = jax.lax.dynamic_update_slice_in_dim(kv.k, kk.astype(kv.k.dtype), pos, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(kv.v, vv.astype(kv.v.dtype), pos, axis=1)
+        att = L.decode_attention(q, nk, nv, pos + 1)
+        h = h + L.apply_linear(blk["attn"]["wo"], att.reshape(b, 1, -1))
+        # cross attention (static cache)
+        y = L.rmsnorm(blk["lnx"], h)
+        qx = L.apply_linear(blk["xattn"]["wq"], y).reshape(b, 1, h_heads, hd)
+        attx = L.decode_attention(qx, ck, cv, ck.shape[1])
+        h = h + L.apply_linear(blk["xattn"]["wo"], attx.reshape(b, 1, -1))
+        # mlp
+        h = h + L.apply_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h), cfg.act)
+        return h, KVCache(nk, nv)
+
+    x, new_self = scan_or_loop(
+        body, x, (params["dec_blocks"], cache.self_kv, cache.cross_k, cache.cross_v),
+        cfg.scan_layers,
+    )
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = L.apply_linear(params["lm_head"], x)
+    return logits[:, 0], cache._replace(self_kv=new_self)

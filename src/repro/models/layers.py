@@ -1,0 +1,297 @@
+"""Primitive layers: norms, RoPE, linear dispatch, attention (full /
+blockwise-flash / sliding-window / decode), gated MLP.
+
+Everything is a pure function over explicit param pytrees. A "linear" param is
+one of three forms, dispatched by `apply_linear`:
+
+  * dense:        jnp.ndarray (d_in, d_out)
+  * low-rank:     {"w1": (d_in, k), "w2": (k, d_out)}            (Dobi-SVD factors)
+  * remapped:     {"u8", "v8", "tail", "su", "sv"}               (Algorithm 3 storage)
+
+so a compressed model is the *same* model code with swapped leaves. Stacked
+(scan) layers carry a leading L dim on every leaf; low-rank ranks inside one
+stack are zero-padded to the stack max (exact — zero factor columns contribute
+nothing).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Param = Any  # array or dict-of-arrays
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def apply_linear(p: Param, x: jnp.ndarray) -> jnp.ndarray:
+    """Dispatch on the parameter form. x: (..., d_in) → (..., d_out)."""
+    if isinstance(p, dict):
+        if "u8" in p:      # remapped mixed-precision storage
+            return kops.quant_lowrank_matmul(
+                x, p["u8"], p["tail"], p["v8"], p["su"], p["sv"]
+            )
+        if "w1" in p:      # plain low-rank factors
+            return kops.lowrank_matmul(x, p["w1"], p["w2"])
+        raise TypeError(f"unknown linear param dict keys: {list(p)}")
+    return x @ p
+
+
+def linear_out_dim(p: Param) -> int:
+    if isinstance(p, dict):
+        if "u8" in p:
+            return p["v8"].shape[0]
+        return p["w2"].shape[-1]
+    return p.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)  # gemma-style (1 + w) scaling
+
+
+def rmsnorm(w: jnp.ndarray | None, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        y = y * (1.0 + w.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def nonparametric_layernorm(x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """OLMo-style LN without scale/bias."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def apply_norm(norm_type: str, w, x):
+    if norm_type == "nonparametric":
+        return nonparametric_layernorm(x)
+    return rmsnorm(w, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float, positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (...,) int32 → cos/sin of shape (..., head_dim/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (S, D/2) or (B, S, D/2)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KVH, D) → (B, S, KVH*groups, D) by repeat (GQA)."""
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+def full_attention(
+    q: jnp.ndarray,           # (B, Sq, H, D)
+    k: jnp.ndarray,           # (B, Skv, KVH, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Direct attention — used for short sequences and as a test oracle."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    scale = 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blockwise_attention(
+    q: jnp.ndarray,           # (B, S, H, D)
+    k: jnp.ndarray,           # (B, S, KVH, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+    block_skip: bool = True,
+    unroll_kv: bool = False,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention, O(S·block) memory.
+
+    `block_skip` statically skips KV blocks that are fully masked for a given
+    query block (causal upper triangle / outside the sliding window) by
+    unrolling the query-block loop — the compiled HLO contains only live
+    (q-block, kv-block) pairs, halving compute for causal attention.
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    if s % block_q != 0 or s % block_kv != 0:
+        return full_attention(q, k, v, causal=causal, window=window)
+
+    nq = s // block_q
+    nkv = s // block_kv
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+
+    def q_block(iq: int) -> jnp.ndarray:
+        qb = jax.lax.dynamic_slice_in_dim(q, iq * block_q, block_q, axis=1)
+        qb = qb.astype(jnp.float32) * scale
+        qpos = iq * block_q + jnp.arange(block_q)
+
+        # Static live range of kv blocks for this q block.
+        lo_blk = 0
+        hi_blk = nkv
+        if causal:
+            hi_blk = min(nkv, ((iq + 1) * block_q + block_kv - 1) // block_kv)
+        if window > 0:
+            lo_blk = max(0, (iq * block_q - window) // block_kv)
+        if not block_skip:
+            lo_blk, hi_blk = 0, nkv
+
+        def kv_step(carry, ikv):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ikv * block_kv, block_kv, axis=1).astype(jnp.float32)
+            vb = jax.lax.dynamic_slice_in_dim(v, ikv * block_kv, block_kv, axis=1).astype(jnp.float32)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", qb, kb)
+            kpos = ikv * block_kv + jnp.arange(block_kv)
+            msk = jnp.ones((block_q, block_kv), bool)
+            if causal:
+                msk &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                msk &= qpos[:, None] - kpos[None, :] < window
+            sc = jnp.where(msk[None, None], sc, -1e30)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, d), jnp.float32)
+        if unroll_kv:   # cost probes: scan bodies are counted once by XLA
+            carry = (m0, l0, a0)
+            for ikv in range(lo_blk, hi_blk):
+                carry, _ = kv_step(carry, ikv)
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(lo_blk, hi_blk)
+            )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # (B, bq, H, D)
+
+    outs = [q_block(iq) for iq in range(nq)]
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(
+    q: jnp.ndarray,           # (B, 1, H, D)
+    k_cache: jnp.ndarray,     # (B, S, KVH, D)
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray | int,  # valid cache length (scalar)
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Single-token decode attention against a (possibly padded) KV cache.
+
+    GQA-aware: the query is reshaped to (B, 1, KVH, G, D) and contracted
+    against the cache directly — the KV tensors are never repeated G× nor
+    upcast (a §Perf iteration: the expand-then-f32 form dominated decode HBM
+    traffic). The sequence-parallel (sharded-S) variant with distributed
+    softmax lives in parallel/collectives.py.
+    """
+    b, s, kvh, d = k_cache.shape
+    h = q.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, 1, kvh, groups, d)
+    # scores: (B, KVH, G, 1, S) — KV read once, in its native dtype
+    sc = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s)
+    valid = kpos[None, None, None, None, :] < jnp.asarray(length).reshape(-1, 1, 1, 1, 1)
+    if window > 0:
+        valid &= kpos[None, None, None, None, :] >= (
+            jnp.asarray(length).reshape(-1, 1, 1, 1, 1) - window)
+    sc = jnp.where(valid, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def apply_mlp(p, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    g = apply_linear(p["gate"], x)
+    u = apply_linear(p["up"], x)
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    return apply_linear(p["down"], h)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts block: top-k routing with static-shape gather dispatch.
+
+Dispatch is the sort-based "sparse" formulation (static shapes, pjit-safe):
+
+  1. router logits → top-k (expert id, gate) per token;
+  2. flatten (token, slot) pairs, sort by expert id;
+  3. position-within-expert = rank in the sorted order minus the expert's
+     start offset; pairs beyond the expert capacity C are dropped
+     (GShard-style capacity; C = tokens/E · k · capacity_factor);
+  4. scatter tokens into an (E, C, d) buffer, run the batched expert FFN,
+     scatter-add back weighted by the gate.
+
+No (T, E, C) one-hot dispatch tensors are ever materialized — peak extra
+memory is the (E, C, d) expert buffer.
+
+Sharding: expert FFN weights are (E, d, d_ff); `d_ff` is sharded over the
+"model" mesh axis (TP-within-expert — always valid). When E divides the model
+axis the configs may instead shard E ("expert parallelism"); both are plain
+PartitionSpec choices on the same code.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    e = num_experts
+    return {
+        "router": (jax.random.normal(k1, (d_model, e), jnp.float32) * s_in).astype(jnp.float32),
+        "gate": (jax.random.normal(k2, (e, d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "up": (jax.random.normal(k3, (e, d_model, d_ff), jnp.float32) * s_in).astype(dtype),
+        "down": (jax.random.normal(k4, (e, d_ff, d_model), jnp.float32) * s_out).astype(dtype),
+    }
+
+
+def _expert_mm(w, xbuf: jnp.ndarray) -> jnp.ndarray:
+    """Batched expert matmul; dispatches dense (E,din,dout) vs Dobi-SVD factored
+    {"w1": (E,din,k), "w2": (E,k,dout)} expert weights (ranks zero-padded to the
+    per-stack max, which is exact)."""
+    if isinstance(w, dict):
+        tmp = jnp.einsum("ecd,edk->eck", xbuf, w["w1"])
+        return jnp.einsum("eck,ekf->ecf", tmp, w["w2"])
+    return jnp.einsum("ecd,edf->ecf", xbuf, w)
+
+
+def apply_moe(
+    p: dict[str, Any],
+    x: jnp.ndarray,            # (T, d) — callers flatten (B, S)
+    *,
+    top_k: int = 2,
+    capacity_factor: float = 1.25,
+    act: str = "silu",
+    min_capacity: int = 0,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (T, d), aux_loss scalar — load-balance loss).
+
+    `min_capacity=t` makes routing dropless (used at decode, where T = batch
+    is tiny and GShard drops would corrupt single-token outputs)."""
+    t, d = x.shape
+    e = p["router"].shape[1]
+    capacity = max(1, min_capacity, int(t * top_k * capacity_factor / e))
+
+    logits = x.astype(jnp.float32) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)          # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance auxiliary loss (Switch-style).
+    density = jnp.mean(jax.nn.one_hot(experts[:, 0], e), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_proxy) * e
+
+    # ---- sort-based dispatch ------------------------------------------------
+    flat_expert = experts.reshape(-1)                     # (T·k,)
+    flat_gate = gates.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)
+
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    # position within expert = global sorted rank − start offset of the expert
+    counts = jnp.bincount(flat_expert, length=e)          # (E,)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    ranks = jnp.arange(t * top_k)
+    slot = ranks - starts[sorted_expert]
+    keep = slot < capacity
+    slot = jnp.where(keep, slot, 0)
+
+    buf_idx = sorted_expert * capacity + slot             # (T·k,)
+    xbuf = jnp.zeros((e * capacity, d), x.dtype)
+    contrib = jnp.where(keep[:, None], x[sorted_token], 0)
+    xbuf = xbuf.at[buf_idx].add(contrib)                  # dup slots impossible (unique ranks)
+    xbuf = xbuf.reshape(e, capacity, d)
+
+    # ---- batched expert FFN -------------------------------------------------
+    g = _expert_mm(p["gate"], xbuf)
+    u = _expert_mm(p["up"], xbuf)
+    h = (jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)) * u
+    ybuf = _expert_mm(p["down"], h).reshape(e * capacity, d)
+
+    # ---- combine -------------------------------------------------------------
+    y_tok = ybuf[buf_idx] * (sorted_gate * keep)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[sorted_token].add(y_tok.astype(x.dtype))
+    return out, aux

@@ -1,0 +1,262 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training/prefill scan and
+O(1)-state decode step.
+
+Faithful to the SSD formulation (Dao & Gu 2024, arXiv:2405.21060):
+
+  h_t = exp(Δ_t A) h_{t−1} + Δ_t B_t ⊗ x_t ,   y_t = C_tᵀ h_t + D x_t
+
+computed chunk-parallel: intra-chunk via the masked-decay quadratic form
+(MXU-friendly — this is the "duality"), inter-chunk via a sequential scan of
+chunk states (length S/chunk, tiny state).
+
+Dobi-SVD applies to `in_proj`/`out_proj` (≈90 % of block params); the SSD
+path has no weight matrix to compress (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_mamba(key, d_model: int, *, d_state: int, expand: int = 2,
+               headdim: int = 64, conv_width: int = 4, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * d_state + nheads
+    return {
+        "in_proj": L.init_linear(k1, d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (conv_width, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(nheads), nheads)).astype(jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": L.init_rmsnorm(d_inner),
+        "out_proj": L.init_linear(k3, d_inner, d_model, dtype,
+                                  scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, conv_width−1, conv_ch) — trailing conv inputs
+    ssm: jnp.ndarray     # (B, H, P, N) — state matrix
+
+
+def init_mamba_cache(batch: int, d_model: int, *, d_state: int, expand: int = 2,
+                     headdim: int = 64, conv_width: int = 4, dtype=jnp.bfloat16) -> MambaCache:
+    d_inner = expand * d_model
+    nheads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    return MambaCache(
+        conv=jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, nheads, headdim, d_state), jnp.float32),
+    )
+
+
+def _split_in_proj(zxbcdt: jnp.ndarray, d_inner: int, d_state: int, nheads: int):
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv along seq. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Masked segment-sum: out[..., i, j] = Σ_{t=j+1..i} x[..., t]  (i ≥ j)."""
+    c = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P)  fp32
+    dt: jnp.ndarray,     # (B, S, H)     fp32 (post-softplus)
+    a: jnp.ndarray,      # (H,)          fp32 (negative)
+    b_in: jnp.ndarray,   # (B, S, N)
+    c_in: jnp.ndarray,   # (B, S, N)
+    *,
+    chunk: int = 256,
+    initial_state: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    if s % chunk != 0:
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    xz = x.reshape(bsz, nc, chunk, h, p)
+    dtz = dt.reshape(bsz, nc, chunk, h)
+    bz = b_in.reshape(bsz, nc, chunk, n)
+    cz = c_in.reshape(bsz, nc, chunk, n)
+
+    da = dtz * a[None, None, None, :]                   # (B,nc,c,H) ≤ 0
+    da_hc = jnp.moveaxis(da, -1, 2)                     # (B,nc,H,c)
+    lmat = jnp.exp(_segsum(da_hc))                      # (B,nc,H,c,c)
+    xdt = xz * dtz[..., None]                           # (B,nc,c,H,P)
+
+    # intra-chunk (quadratic / "attention-like" form)
+    y_diag = jnp.einsum("bzin,bzjn,bzhij,bzjhp->bzihp", cz, bz, lmat, xdt)
+
+    # end-of-chunk states contributed by each position j
+    cum = jnp.cumsum(da_hc, axis=-1)                    # (B,nc,H,c)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)         # (B,nc,H,c)
+    states = jnp.einsum("bzjn,bzhj,bzjhp->bzhpn", bz, decay_to_end, xdt)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(cum[..., -1])                 # (B,nc,H)
+    init = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(carry, inp):
+        st, dec = inp
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev
+
+    states_t = jnp.moveaxis(states, 1, 0)               # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)           # (nc,B,H)
+    final, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # off-diagonal: contribution of the incoming state to each position
+    state_decay = jnp.exp(cum)                          # (B,nc,H,c)
+    y_off = jnp.einsum("bzin,bzhpn,bzhi->bzihp", cz, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, sp, h, p)[:, :s]
+    return y, final
+
+
+def ssd_reference(x, dt, a, b_in, c_in, initial_state=None):
+    """Naive sequential recurrence — oracle for tests."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    st = (
+        jnp.zeros((bsz, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+    ys = []
+    for t in range(s):
+        dec = jnp.exp(dt[:, t] * a[None, :])            # (B,H)
+        st = st * dec[:, :, None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", x[:, t], b_in[:, t], dt[:, t]
+        )
+        ys.append(jnp.einsum("bn,bhpn->bhp", c_in[:, t], st))
+    y = jnp.stack(ys, axis=1)                           # (B,S,H,P)
+    return y, st
+
+
+def apply_mamba(
+    p: dict[str, Any],
+    x: jnp.ndarray,                     # (B, S, d_model)
+    *,
+    d_state: int,
+    headdim: int = 64,
+    chunk: int = 256,
+    initial_cache: MambaCache | None = None,
+    return_cache: bool = False,
+):
+    """Full-sequence mamba2 block (train / prefill)."""
+    bsz, s, _ = x.shape
+    d_inner = p["norm"].shape[0]
+    nheads = p["a_log"].shape[0]
+
+    zxbcdt = L.apply_linear(p["in_proj"], x)
+    z, xbc_raw, dt_raw = _split_in_proj(zxbcdt, d_inner, d_state, nheads)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner : d_inner + d_state].astype(jnp.float32)
+    c_in = xbc[..., d_inner + d_state :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, s, nheads, headdim).astype(jnp.float32)
+
+    y, final_state = ssd_chunked(xh, dt, a, b_in, c_in, chunk=chunk,
+                                 initial_state=None if initial_cache is None else initial_cache.ssm)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = L.apply_linear(p["out_proj"], y)
+    if return_cache:
+        w1 = p["conv_w"].shape[0] - 1
+        tail = xbc_raw[:, -w1:] if s >= w1 else jnp.concatenate(
+            [jnp.zeros((bsz, w1 - s, xbc_raw.shape[-1]), x.dtype), xbc_raw], axis=1
+        )
+        cache = MambaCache(conv=tail.astype(x.dtype), ssm=final_state)
+        return out, cache
+    return out
+
+
+def apply_mamba_decode(
+    p: dict[str, Any],
+    x: jnp.ndarray,                     # (B, 1, d_model)
+    cache: MambaCache,
+    *,
+    d_state: int,
+    headdim: int = 64,
+) -> tuple[jnp.ndarray, MambaCache]:
+    """Single-token decode: O(1) state update."""
+    bsz = x.shape[0]
+    d_inner = p["norm"].shape[0]
+    nheads = p["a_log"].shape[0]
+
+    zxbcdt = L.apply_linear(p["in_proj"], x[:, 0])       # (B, d_in_proj)
+    z = zxbcdt[..., :d_inner]
+    xbc_new = zxbcdt[..., d_inner : 2 * d_inner + 2 * d_state]
+    dt_raw = zxbcdt[..., 2 * d_inner + 2 * d_state :]
+
+    # conv over the cached window + the new input
+    window = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)  # (B, W, C)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)
+
+    xin = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner : d_inner + d_state]
+    c_in = xbc[..., d_inner + d_state :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])   # (B,H)
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(bsz, nheads, headdim)
+
+    dec = jnp.exp(dt * a[None, :])                       # (B,H)
+    new_state = cache.ssm * dec[:, :, None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn", xh, b_in, dt
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_in, new_state)      # (B,H,P)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = L.apply_linear(p["out_proj"], y)[:, None, :]
+    new_cache = MambaCache(conv=window[:, 1:].astype(cache.conv.dtype), ssm=new_state)
+    return out, new_cache

@@ -1,0 +1,709 @@
+"""Decoder-only transformer LM assembly.
+
+Three structural templates, all scan-over-layers (HLO size independent of L):
+
+  * uniform   — dense / moe / ssm stacks: one `lax.scan` over stacked params;
+  * gemma     — repeating groups of (global_every−1) sliding-window layers + 1
+                global layer (nested scan); remainder layers form a tail stack;
+  * zamba     — groups of `attn_every` mamba layers followed by one *shared*
+                attention+MLP block (single param set, fresh KV per invocation).
+
+KV caches: global-attention layers hold (B, S_max, KVH, Dh); sliding-window
+layers hold a ring buffer of size `window` — keys are stored with RoPE already
+applied at their absolute position, so ring order is irrelevant to the
+softmax and the long-context cache stays O(window).
+
+Every linear goes through models.layers.apply_linear, so a Dobi-SVD-compressed
+model is the same code with factored/remapped leaves (see compress_params).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.parallel.sharding import constrain_batch, constrain_logits
+
+
+def scan_or_loop(body, carry, xs, use_scan: bool):
+    """lax.scan, or an unrolled Python loop (scan_layers=False).
+
+    The unrolled form exists for the dry-run cost probes: XLA cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so per-layer costs
+    are measured on small unrolled graphs and extrapolated (launch/dryrun.py).
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d, h, kvh, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_linear(k1, d, h * hd, dtype),
+        "wk": L.init_linear(k2, d, kvh * hd, dtype),
+        "wv": L.init_linear(k3, d, kvh * hd, dtype),
+        "wo": L.init_linear(k4, h * hd, d, dtype, scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd)
+        p["k_norm"] = L.init_rmsnorm(hd)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.apply_linear(p["wq"], x).reshape(b, s, h, hd)
+    k = L.apply_linear(p["wk"], x).reshape(b, s, kvh, hd)
+    v = L.apply_linear(p["wv"], x).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    cos, sin = L.rope_frequencies(hd, cfg.rope_theta, positions)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def apply_attention(
+    p, x, cfg: ModelConfig, *, window: int, causal: bool = True
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). x: (B, S, D)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if s <= max(cfg.attn_block_q, 1024):
+        out = L.full_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = L.blockwise_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            block_skip=cfg.causal_block_skip, unroll_kv=cfg.unroll_attn_kv,
+        )
+    return L.apply_linear(p["wo"], out.reshape(b, s, -1))
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray       # (B, S_cache, KVH, Dh)
+    v: jnp.ndarray
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    s_cache = min(window, max_len) if window > 0 else max_len
+    shape = (batch, s_cache, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def prefill_attention(
+    p, x, cfg: ModelConfig, cache: KVCache, *, window: int
+) -> tuple[jnp.ndarray, KVCache]:
+    """Full-sequence attention that also populates the cache (from position 0)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if s <= max(cfg.attn_block_q, 1024):
+        out = L.full_attention(q, k, v, causal=True, window=window)
+    else:
+        out = L.blockwise_attention(
+            q, k, v, causal=True, window=window,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            block_skip=cfg.causal_block_skip, unroll_kv=cfg.unroll_attn_kv,
+        )
+    s_cache = cache.k.shape[1]
+    if s >= s_cache:
+        # keep the last s_cache entries; ring slot of pos i is i % s_cache
+        tail_k, tail_v = k[:, -s_cache:], v[:, -s_cache:]
+        slots = (jnp.arange(s - s_cache, s)) % s_cache
+        new_k = jnp.zeros_like(cache.k).at[:, slots].set(tail_k.astype(cache.k.dtype))
+        new_v = jnp.zeros_like(cache.v).at[:, slots].set(tail_v.astype(cache.v.dtype))
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    return L.apply_linear(p["wo"], out.reshape(b, s, -1)), KVCache(new_k, new_v)
+
+
+def decode_attention_layer(
+    p, x, cfg: ModelConfig, cache: KVCache, length, *, window: int
+) -> tuple[jnp.ndarray, KVCache]:
+    """Single-token decode. x: (B, 1, D); `length` = tokens already in cache."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    positions = jnp.full((1,), length, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    s_cache = cache.k.shape[1]
+    slot = jnp.asarray(length, jnp.int32) % s_cache
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+
+    if window > 0:
+        # ring cache: every resident slot is within the window by construction
+        out = L.decode_attention(q, new_k, new_v, ring_valid_count(length, s_cache))
+    else:
+        out = L.decode_attention(q, new_k, new_v, length + 1)
+    return L.apply_linear(p["wo"], out.reshape(b, 1, -1)), KVCache(new_k, new_v)
+
+
+def ring_valid_count(length, s_cache: int):
+    """Number of valid slots in a ring cache after writing position `length`."""
+    return jnp.minimum(jnp.asarray(length) + 1, s_cache)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, kind: str, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model),
+            "mamba": ssm_lib.init_mamba(
+                k1, cfg.d_model, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+                headdim=cfg.ssm_headdim, conv_width=cfg.ssm_conv_width, dtype=dtype,
+            ),
+        }
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg, dtype),
+    }
+    if kind == "moe":
+        p["moe"] = moe_lib.init_moe(k2, cfg.d_model, cfg.d_ff, cfg.num_experts, dtype)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _norm(cfg: ModelConfig, w, x):
+    return L.apply_norm(cfg.norm_type, w, x)
+
+
+def apply_block(
+    p, x, cfg: ModelConfig, kind: str, *, window: int, causal: bool = True
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "mamba":
+        h = ssm_lib.apply_mamba(
+            p["mamba"], _norm(cfg, p["ln1"], x),
+            d_state=cfg.ssm_state, headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk,
+        )
+        return x + h, aux
+    h = apply_attention(p["attn"], _norm(cfg, p["ln1"], x), cfg, window=window, causal=causal)
+    x = constrain_batch(x + h)
+    y = _norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        b, s, d = y.shape
+        out, aux = moe_lib.apply_moe(
+            p["moe"], y.reshape(b * s, d),
+            top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+        )
+        out = out.reshape(b, s, d)
+    else:
+        out = L.apply_mlp(p["mlp"], y, cfg.act)
+    return x + out, aux
+
+
+def prefill_block(p, x, cfg, kind, cache, *, window: int):
+    if kind == "mamba":
+        h, new_cache = ssm_lib.apply_mamba(
+            p["mamba"], _norm(cfg, p["ln1"], x),
+            d_state=cfg.ssm_state, headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk,
+            return_cache=True,
+        )
+        return x + h, new_cache
+    h, new_cache = prefill_attention(p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, window=window)
+    x = x + h
+    y = _norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        b, s, d = y.shape
+        out, _ = moe_lib.apply_moe(
+            p["moe"], y.reshape(b * s, d), top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+        )
+        out = out.reshape(b, s, d)
+    else:
+        out = L.apply_mlp(p["mlp"], y, cfg.act)
+    return x + out, new_cache
+
+
+def decode_block(p, x, cfg, kind, cache, length, *, window: int):  # noqa: C901
+    if kind == "mamba":
+        h, new_cache = ssm_lib.apply_mamba_decode(
+            p["mamba"], _norm(cfg, p["ln1"], x), cache,
+            d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+        )
+        return x + h, new_cache
+    h, new_cache = decode_attention_layer(
+        p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, length, window=window
+    )
+    x = x + h
+    y = _norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        b, s, d = y.shape
+        out, _ = moe_lib.apply_moe(
+            p["moe"], y.reshape(b * s, d), top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+            min_capacity=b * s,   # dropless at decode (T = batch, tiny)
+        )
+        out = out.reshape(b, s, d)
+    else:
+        out = L.apply_mlp(p["mlp"], y, cfg.act)
+    return x + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Structural templates
+# ---------------------------------------------------------------------------
+
+def plan_structure(cfg: ModelConfig) -> dict:
+    """Describe the layer stacking for init/apply. See module docstring."""
+    if cfg.family == "hybrid" and cfg.attn_every > 0:
+        groups = cfg.num_layers // cfg.attn_every
+        rem = cfg.num_layers % cfg.attn_every
+        return {"template": "zamba", "groups": groups, "per_group": cfg.attn_every, "rem": rem}
+    if cfg.global_every > 1:
+        per = cfg.global_every
+        groups = cfg.num_layers // per
+        rem = cfg.num_layers % per
+        return {"template": "gemma", "groups": groups, "local_per_group": per - 1, "rem": rem}
+    kind = {"moe": "moe", "ssm": "mamba"}.get(cfg.family, "dense")
+    return {"template": "uniform", "layers": cfg.num_layers, "kind": kind}
+
+
+def _stack_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    plan = plan_structure(cfg)
+    k_embed, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                  / math.sqrt(cfg.d_model)).astype(dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(k_head, cfg.d_model, cfg.vocab_size, dtype)
+
+    if plan["template"] == "uniform":
+        params["blocks"] = _stack_init(
+            k_blocks, plan["layers"], lambda k: init_block(k, cfg, plan["kind"], dtype)
+        )
+    elif plan["template"] == "gemma":
+        g, lpg = plan["groups"], plan["local_per_group"]
+        k1, k2, k3 = jax.random.split(k_blocks, 3)
+        params["local_blocks"] = _stack_init(
+            k1, g * lpg, lambda k: init_block(k, cfg, "dense", dtype)
+        )
+        # reshape leading dim to (G, lpg)
+        params["local_blocks"] = jax.tree.map(
+            lambda a: a.reshape(g, lpg, *a.shape[1:]), params["local_blocks"]
+        )
+        params["global_blocks"] = _stack_init(
+            k2, g, lambda k: init_block(k, cfg, "dense", dtype)
+        )
+        if plan["rem"]:
+            params["rem_blocks"] = _stack_init(
+                k3, plan["rem"], lambda k: init_block(k, cfg, "dense", dtype)
+            )
+    elif plan["template"] == "zamba":
+        g, pg = plan["groups"], plan["per_group"]
+        k1, k2, k3 = jax.random.split(k_blocks, 3)
+        params["mamba_blocks"] = _stack_init(
+            k1, g * pg, lambda k: init_block(k, cfg, "mamba", dtype)
+        )
+        params["mamba_blocks"] = jax.tree.map(
+            lambda a: a.reshape(g, pg, *a.shape[1:]), params["mamba_blocks"]
+        )
+        params["shared_attn"] = init_block(k2, cfg, "dense", dtype)  # ONE shared block
+        if plan["rem"]:
+            params["rem_mamba"] = _stack_init(
+                k3, plan["rem"], lambda k: init_block(k, cfg, "mamba", dtype)
+            )
+    return params
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        None if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward(
+    params: dict,
+    tokens: jnp.ndarray,            # (B, S) int32
+    cfg: ModelConfig,
+    *,
+    prefix_embeds: jnp.ndarray | None = None,   # (B, P, D) — VLM/audio stub
+    return_hidden: bool = False,
+) -> jnp.ndarray:
+    """Training/scoring forward. Returns logits (B, S_total, V) or hidden."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_batch(x * math.sqrt(cfg.d_model))
+
+    plan = plan_structure(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if plan["template"] == "uniform":
+        kind = plan["kind"]
+        window = cfg.sliding_window
+
+        def body(carry, blk):
+            h, aux = carry
+            h2, a = apply_block(blk, h, cfg, kind, window=window)
+            return (h2, aux + a), None
+
+        body = _maybe_remat(cfg, body)
+        (x, aux_total), _ = scan_or_loop(body, (x, aux_total), params["blocks"], cfg.scan_layers)
+
+    elif plan["template"] == "gemma":
+        w = cfg.sliding_window
+
+        def group(carry, blks):
+            h, aux = carry
+            local_stack, global_blk = blks
+
+            def local_body(c, blk):
+                hh, aa = c
+                h2, a = apply_block(blk, hh, cfg, "dense", window=w)
+                return (h2, aa + a), None
+
+            (h, aux), _ = scan_or_loop(local_body, (h, aux), local_stack, cfg.scan_layers)
+            h, a = apply_block(global_blk, h, cfg, "dense", window=0)
+            return (h, aux + a), None
+
+        group = _maybe_remat(cfg, group)
+        (x, aux_total), _ = scan_or_loop(
+            group, (x, aux_total), (params["local_blocks"], params["global_blocks"]), cfg.scan_layers
+        )
+        if "rem_blocks" in params:
+            def rem_body(carry, blk):
+                h, aux = carry
+                h2, a = apply_block(blk, h, cfg, "dense", window=w)
+                return (h2, aux + a), None
+            (x, aux_total), _ = scan_or_loop(
+                _maybe_remat(cfg, rem_body), (x, aux_total), params["rem_blocks"], cfg.scan_layers
+            )
+
+    elif plan["template"] == "zamba":
+        def group(carry, blks):
+            h, aux = carry
+            mamba_stack = blks
+
+            def m_body(c, blk):
+                hh, aa = c
+                h2, a = apply_block(blk, hh, cfg, "mamba", window=0)
+                return (h2, aa + a), None
+
+            (h, aux), _ = scan_or_loop(m_body, (h, aux), mamba_stack, cfg.scan_layers)
+            h, a = apply_block(params["shared_attn"], h, cfg, "dense",
+                               window=cfg.sliding_window)
+            return (h, aux + a), None
+
+        group = _maybe_remat(cfg, group)
+        (x, aux_total), _ = scan_or_loop(group, (x, aux_total), params["mamba_blocks"], cfg.scan_layers)
+        if "rem_mamba" in params:
+            def rem_body(carry, blk):
+                h, aux = carry
+                h2, a = apply_block(blk, h, cfg, "mamba", window=0)
+                return (h2, aux + a), None
+            (x, aux_total), _ = scan_or_loop(
+                _maybe_remat(cfg, rem_body), (x, aux_total), params["rem_mamba"], cfg.scan_layers
+            )
+
+    x = L.rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.apply_linear(head, x)
+    return constrain_logits(logits), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Whole-model prefill / decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Cache pytree mirroring the structural template."""
+    plan = plan_structure(cfg)
+    w = cfg.sliding_window
+
+    def kv(n_stack, window):
+        base = init_kv_cache(cfg, batch, max_len, window, dtype)
+        def tile(a):
+            return jnp.broadcast_to(a, n_stack + a.shape) if n_stack else a
+        return KVCache(tile(base.k), tile(base.v))
+
+    def mamba(n_stack):
+        base = ssm_lib.init_mamba_cache(
+            batch, cfg.d_model, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            headdim=cfg.ssm_headdim, conv_width=cfg.ssm_conv_width, dtype=dtype,
+        )
+        def tile(a):
+            return jnp.broadcast_to(a, n_stack + a.shape) if n_stack else a
+        return ssm_lib.MambaCache(tile(base.conv), tile(base.ssm))
+
+    if plan["template"] == "uniform":
+        if plan["kind"] == "mamba":
+            return {"blocks": mamba((plan["layers"],))}
+        return {"blocks": kv((plan["layers"],), w)}
+    if plan["template"] == "gemma":
+        g, lpg = plan["groups"], plan["local_per_group"]
+        cache = {
+            "local": kv((g, lpg), w),
+            "global": kv((g,), 0),
+        }
+        if plan["rem"]:
+            cache["rem"] = kv((plan["rem"],), w)
+        return cache
+    # zamba
+    g, pg = plan["groups"], plan["per_group"]
+    cache = {
+        "mamba": mamba((g, pg)),
+        "attn": kv((g,), w),
+    }
+    if plan["rem"]:
+        cache["rem"] = mamba((plan["rem"],))
+    return cache
+
+
+def prefill(
+    params: dict,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    cache: dict,
+    *,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, dict]:
+    """Run the prompt, fill caches, return logits of the LAST position (B, V)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = constrain_batch(x * math.sqrt(cfg.d_model))
+    plan = plan_structure(cfg)
+    w = cfg.sliding_window
+    new_cache: dict = {}
+
+    if plan["template"] == "uniform":
+        kind = plan["kind"]
+
+        def body(h, xs):
+            blk, c = xs
+            h2, nc = prefill_block(blk, h, cfg, kind, c, window=w)
+            return h2, nc
+
+        x, new_cache["blocks"] = scan_or_loop(body, x, (params["blocks"], cache["blocks"]), cfg.scan_layers)
+
+    elif plan["template"] == "gemma":
+        def group(h, xs):
+            (local_stack, global_blk), (local_c, global_c) = xs
+
+            def local_body(hh, ys):
+                blk, c = ys
+                h2, nc = prefill_block(blk, hh, cfg, "dense", c, window=w)
+                return h2, nc
+
+            h, new_local = scan_or_loop(local_body, h, (local_stack, local_c), cfg.scan_layers)
+            h, new_global = prefill_block(global_blk, h, cfg, "dense", global_c, window=0)
+            return h, (new_local, new_global)
+
+        x, (nl, ng) = scan_or_loop(
+            group, x,
+            ((params["local_blocks"], params["global_blocks"]),
+             (cache["local"], cache["global"])), cfg.scan_layers,
+        )
+        new_cache["local"], new_cache["global"] = nl, ng
+        if "rem_blocks" in params:
+            def rem_body(h, xs):
+                blk, c = xs
+                h2, nc = prefill_block(blk, h, cfg, "dense", c, window=w)
+                return h2, nc
+            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_blocks"], cache["rem"]), cfg.scan_layers)
+
+    else:  # zamba
+        def group(h, xs):
+            mamba_stack, (mamba_c, attn_c) = xs
+
+            def m_body(hh, ys):
+                blk, c = ys
+                h2, nc = prefill_block(blk, hh, cfg, "mamba", c, window=0)
+                return h2, nc
+
+            h, new_m = scan_or_loop(m_body, h, (mamba_stack, mamba_c), cfg.scan_layers)
+            h, new_a = prefill_block(params["shared_attn"], h, cfg, "dense", attn_c,
+                                     window=cfg.sliding_window)
+            return h, (new_m, new_a)
+
+        x, (nm, na) = scan_or_loop(
+            group, x, (params["mamba_blocks"], (cache["mamba"], cache["attn"])), cfg.scan_layers
+        )
+        new_cache["mamba"], new_cache["attn"] = nm, na
+        if "rem_mamba" in params:
+            def rem_body(h, xs):
+                blk, c = xs
+                h2, nc = prefill_block(blk, h, cfg, "mamba", c, window=0)
+                return h2, nc
+            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_mamba"], cache["rem"]), cfg.scan_layers)
+
+    x = L.rmsnorm(params["final_norm"], x[:, -1:])
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.apply_linear(head, x)
+    return logits[:, 0], new_cache
+
+
+def decode_step(
+    params: dict,
+    token: jnp.ndarray,        # (B,) int32 — current input token
+    cfg: ModelConfig,
+    cache: dict,
+    length,                    # scalar int — tokens already in cache
+) -> tuple[jnp.ndarray, dict]:
+    """One decode step: returns (logits (B, V), new_cache)."""
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
+    x = constrain_batch(x * math.sqrt(cfg.d_model))
+    plan = plan_structure(cfg)
+    w = cfg.sliding_window
+    new_cache: dict = {}
+
+    if plan["template"] == "uniform":
+        kind = plan["kind"]
+
+        def body(h, xs):
+            blk, c = xs
+            h2, nc = decode_block(blk, h, cfg, kind, c, length, window=w)
+            return h2, nc
+
+        x, new_cache["blocks"] = scan_or_loop(body, x, (params["blocks"], cache["blocks"]), cfg.scan_layers)
+
+    elif plan["template"] == "gemma":
+        def group(h, xs):
+            (local_stack, global_blk), (local_c, global_c) = xs
+
+            def local_body(hh, ys):
+                blk, c = ys
+                h2, nc = decode_block(blk, hh, cfg, "dense", c, length, window=w)
+                return h2, nc
+
+            h, new_local = scan_or_loop(local_body, h, (local_stack, local_c), cfg.scan_layers)
+            h, new_global = decode_block(global_blk, h, cfg, "dense", global_c, length, window=0)
+            return h, (new_local, new_global)
+
+        x, (nl, ng) = scan_or_loop(
+            group, x,
+            ((params["local_blocks"], params["global_blocks"]),
+             (cache["local"], cache["global"])), cfg.scan_layers,
+        )
+        new_cache["local"], new_cache["global"] = nl, ng
+        if "rem_blocks" in params:
+            def rem_body(h, xs):
+                blk, c = xs
+                h2, nc = decode_block(blk, h, cfg, "dense", c, length, window=w)
+                return h2, nc
+            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_blocks"], cache["rem"]), cfg.scan_layers)
+
+    else:  # zamba
+        def group(h, xs):
+            mamba_stack, (mamba_c, attn_c) = xs
+
+            def m_body(hh, ys):
+                blk, c = ys
+                h2, nc = decode_block(blk, hh, cfg, "mamba", c, length, window=0)
+                return h2, nc
+
+            h, new_m = scan_or_loop(m_body, h, (mamba_stack, mamba_c), cfg.scan_layers)
+            h, new_a = decode_block(params["shared_attn"], h, cfg, "dense", attn_c, length,
+                                    window=cfg.sliding_window)
+            return h, (new_m, new_a)
+
+        x, (nm, na) = scan_or_loop(
+            group, x, (params["mamba_blocks"], (cache["mamba"], cache["attn"])), cfg.scan_layers
+        )
+        new_cache["mamba"], new_cache["attn"] = nm, na
+        if "rem_mamba" in params:
+            def rem_body(h, xs):
+                blk, c = xs
+                h2, nc = decode_block(blk, h, cfg, "mamba", c, length, window=0)
+                return h2, nc
+            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_mamba"], cache["rem"]), cfg.scan_layers)
+
+    x = L.rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.apply_linear(head, x)
+    return logits[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(
+    params: dict,
+    batch: dict,               # {"tokens": (B,S), "targets": (B,S), "mask": (B,S)}
+    cfg: ModelConfig,
+    *,
+    aux_weight: float = 0.01,
+) -> jnp.ndarray:
+    """Masked next-token cross-entropy (+ MoE load-balance aux)."""
+    logits, aux = forward(
+        params, batch["tokens"], cfg, prefix_embeds=batch.get("prefix_embeds")
+    )
+    if batch.get("prefix_embeds") is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:]
+    logits = constrain_logits(logits).astype(jnp.float32)
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamWConfig, AdamWState, init, update, clip_by_global_norm, global_norm
+from repro.optim import schedules

@@ -1,0 +1,114 @@
+"""AdamW from scratch (no optax in this environment).
+
+Features needed at scale:
+  * optional fp32 master params (compute params stay bf16);
+  * configurable optimizer-state dtype (fp32 default; bf16 halves ZeRO bytes);
+  * global-norm gradient clipping;
+  * per-leaf trainable masks (used by Dobi-SVD rank training: only θ trains);
+  * update math always in fp32 regardless of storage dtypes.
+
+State is a pytree-of-pytrees, sharded identically to params by pjit (ZeRO).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_dtype: str = "float32"     # "" → no master copy
+    state_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+    master: Any | None
+
+
+def init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    sdt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sdt)
+    master = None
+    if cfg.master_dtype:
+        mdt = jnp.dtype(cfg.master_dtype)
+        master = jax.tree.map(lambda p: p.astype(mdt), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        master=master,
+    )
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads), norm
+
+
+def update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr_scale: jnp.ndarray | float = 1.0,
+    mask: Any | None = None,
+) -> tuple[Any, AdamWState]:
+    """One AdamW step. `mask` (same structure, bool leaves) freezes leaves."""
+    if cfg.grad_clip > 0:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+    lr = cfg.lr * lr_scale
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    src = state.master if state.master is not None else params
+
+    def leaf_update(g, m, v, p_store, p_compute, trainable=True):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        p32 = p_store.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p32
+        new_p32 = p32 - lr * delta
+        if not trainable:
+            new_p32, m32, v32 = p32, m.astype(jnp.float32), v.astype(jnp.float32)
+        return (
+            m32.astype(m.dtype),
+            v32.astype(v.dtype),
+            new_p32.astype(p_store.dtype),
+            new_p32.astype(p_compute.dtype),
+        )
+
+    if mask is None:
+        out = jax.tree.map(leaf_update, grads, state.m, state.v, src, params)
+    else:
+        out = jax.tree.map(leaf_update, grads, state.m, state.v, src, params, mask)
+
+    pick = lambda i: jax.tree.map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 4
+    )
+    new_m, new_v, new_store, new_compute = pick(0), pick(1), pick(2), pick(3)
+    new_master = new_store if state.master is not None else None
+    new_params = new_compute
+    return new_params, AdamWState(step=step, m=new_m, v=new_v, master=new_master)

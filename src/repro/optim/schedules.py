@@ -1,0 +1,18 @@
+"""LR schedules as pure functions of the step (traced-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def constant(step, **_):
+    return jnp.ones_like(jnp.asarray(step, jnp.float32))

@@ -1,0 +1,1 @@
+from repro.parallel.sharding import param_specs, batch_spec, cache_spec, make_sharding

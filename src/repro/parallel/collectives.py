@@ -1,0 +1,176 @@
+"""shard_map collective patterns.
+
+  * vocab-parallel cross-entropy — logits stay sharded over "model"; the
+    softmax statistics (max, logsumexp) and the gold-logit pick run locally
+    followed by scalar-field psums. Removes the (B, S, V) all-gather that
+    sharding propagation otherwise inserts for the loss — decisive for 262k
+    vocabularies (gemma3). Beyond-paper §Perf optimization.
+
+  * sequence-parallel decode attention — KV cache sharded over "data" on the
+    sequence dim (long-context, batch=1): per-shard partial max / sum-exp /
+    weighted-V, merged with psums (2-pass distributed softmax). Keeps the
+    0.5M-token cache distributed instead of all-gathered.
+
+  * int8 gradient compression with error feedback — quantize grads to int8
+    (per-leaf absmax) before the cross-pod all-reduce; the quantization
+    residual is carried to the next step (error feedback keeps convergence).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel cross-entropy
+# ---------------------------------------------------------------------------
+
+def vocab_parallel_ce(
+    hidden: jnp.ndarray,        # (B, S, D) — batch may be sharded over dp axes
+    lm_head: jnp.ndarray,       # (D, V) — V sharded over "model"
+    targets: jnp.ndarray,       # (B, S)
+    mask: jnp.ndarray,          # (B, S)
+    mesh: Mesh,
+    *,
+    axis: str = "model",
+) -> jnp.ndarray:
+    """Mean masked NLL with logits never materialized unsharded.
+
+    Batch stays sharded over the data axes; softmax stats psum over `axis`;
+    the final scalar psums over the whole mesh. The (B, S, V) logits tensor
+    only ever exists as (B_local, S, V_local) per device.
+    """
+    v_total = lm_head.shape[1]
+    n_shards = mesh.shape[axis]
+    v_local = v_total // n_shards
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = hidden.shape[0]
+    dp_div = 1
+    for a in dp:
+        dp_div *= mesh.shape[a]
+    batch_axes = dp if (b % dp_div == 0 and b >= dp_div) else None
+
+    def local(hid, head, tgt, msk):
+        shard = jax.lax.axis_index(axis)
+        logits = (hid.astype(jnp.float32) @ head.astype(jnp.float32))   # (b,S,v_local)
+        # max-shift is gradient-neutral; pmax has no VJP → stop_gradient INPUT
+        gmax = jax.lax.pmax(jax.lax.stop_gradient(logits.max(axis=-1)), axis)
+        gsum = jax.lax.psum(jnp.exp(logits - gmax[..., None]).sum(axis=-1), axis)
+        logz = gmax + jnp.log(gsum)
+        lo = shard * v_local
+        in_shard = (tgt >= lo) & (tgt < lo + v_local)
+        idx = jnp.clip(tgt - lo, 0, v_local - 1)
+        gold_local = jnp.take_along_axis(logits, idx[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(jnp.where(in_shard, gold_local, 0.0), axis)
+        num = jnp.sum((logz - gold) * msk)      # model-invariant after psums
+        den = jnp.sum(msk)
+        if batch_axes:                          # reduce the data-sharded batch
+            num = jax.lax.psum(num, batch_axes)
+            den = jax.lax.psum(den, batch_axes)
+        return num / jnp.maximum(den, 1.0)
+
+    bspec = P(batch_axes, None)
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(batch_axes, None, None), P(None, axis), bspec, bspec),
+        out_specs=P(),
+    )(hidden, lm_head, targets, mask.astype(jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel decode attention
+# ---------------------------------------------------------------------------
+
+def seq_parallel_decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, D) — replicated over "data"
+    k_cache: jnp.ndarray,      # (B, S, KVH, D) — S sharded over `axis`
+    v_cache: jnp.ndarray,
+    length,                    # total valid length (scalar)
+    mesh: Mesh,
+    *,
+    axis: str = "data",
+) -> jnp.ndarray:
+    """Distributed-softmax decode attention over a sequence-sharded cache."""
+    s_total = k_cache.shape[1]
+    n_shards = mesh.shape[axis]
+    s_local = s_total // n_shards
+    import math
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    def local(qq, kk, vv):
+        shard = jax.lax.axis_index(axis)
+        kvh = kk.shape[2]
+        groups = qq.shape[2] // kvh
+        ke = jnp.repeat(kk, groups, axis=2).astype(jnp.float32)
+        ve = jnp.repeat(vv, groups, axis=2).astype(jnp.float32)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", qq.astype(jnp.float32) * scale, ke)
+        kpos = shard * s_local + jnp.arange(s_local)
+        valid = kpos[None, None, None, :] < jnp.asarray(length).reshape(1, 1, 1, 1)
+        sc = jnp.where(valid, sc, -1e30)
+        lmax = sc.max(axis=-1)                       # (B,H,1)
+        gmax = jax.lax.pmax(lmax, axis)
+        p = jnp.exp(sc - gmax[..., None])
+        lsum = jax.lax.psum(p.sum(axis=-1), axis)    # (B,H,1)
+        acc = jnp.einsum("bhqk,bkhd->bqhd", p, ve)
+        acc = jax.lax.psum(acc, axis)
+        out = acc / jnp.maximum(lsum, 1e-30).transpose(0, 2, 1)[..., None]
+        return out.astype(qq.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None)),
+        out_specs=P(),
+    )(q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+def compress_grads_int8(grads: Any, error: Any | None = None) -> tuple[Any, Any, Any]:
+    """Quantize each leaf to int8 with per-leaf absmax scale.
+
+    Returns (q_leaves int8, scales, new_error). The residual (error feedback)
+    is added back into the next step's grads by the caller before quantizing.
+    """
+    if error is None:
+        error = jax.tree.map(jnp.zeros_like, grads)
+    fed = jax.tree.map(lambda g, e: g + e, grads, error)
+
+    def q(g):
+        absmax = jnp.max(jnp.abs(g))
+        scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+        qi = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return qi, scale.astype(jnp.float32)
+
+    qs = jax.tree.map(q, fed)
+    q_leaves = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    deq = jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q_leaves, scales)
+    new_error = jax.tree.map(lambda f, d: f - d, fed, deq)
+    return q_leaves, scales, new_error
+
+
+def decompress_grads_int8(q_leaves: Any, scales: Any) -> Any:
+    return jax.tree.map(lambda qi, s: qi.astype(jnp.float32) * s, q_leaves, scales)
+
+
+def cross_pod_psum_compressed(grads: Any, error: Any, mesh: Mesh, axis: str = "pod"):
+    """int8-compressed all-reduce over the `axis` mesh dim (error feedback).
+
+    Grads are assumed already reduced within a pod (by pjit's sharding);
+    this performs the *cross-pod* mean in int8. Used inside shard_map bodies.
+    """
+    q_leaves, scales, new_error = compress_grads_int8(grads, error)
+    summed = jax.tree.map(
+        lambda qi: jax.lax.psum(qi.astype(jnp.float32), axis), q_leaves
+    )
+    n = mesh.shape[axis]
+    mean = jax.tree.map(lambda s_, sc: s_ * sc / n, summed, scales)
+    return mean, new_error

@@ -1,0 +1,88 @@
+"""GPipe-style pipeline parallelism over a "stage" mesh axis.
+
+shard_map + collective_permute implementation: the layer stack is split into
+S stages (one per mesh slice along "stage"); microbatches stream through the
+classic GPipe schedule — (S + M − 1) ticks, each tick runs one stage-step on
+every device and ppermutes activations to the next stage.
+
+This is the optional PP strategy (the production meshes use DP×TP; PP slots
+in for very deep models or small-HBM parts). Correctness is tested against
+the unpipelined forward on a host mesh (tests/test_collectives_multidev.py /
+test_pipeline.py).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(
+    stage_fn: Callable[[jnp.ndarray, dict], jnp.ndarray],
+    params_stacked,            # pytree with leading dim = n_stages
+    x: jnp.ndarray,            # (n_micro, micro_batch, ...) microbatched input
+    mesh: Mesh,
+    *,
+    axis: str = "stage",
+) -> jnp.ndarray:
+    """Run x through all stages in pipeline order. Returns (n_micro, mb, ...).
+
+    stage_fn(activations, stage_params) applies one stage's layers.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x.shape[0]
+    assert n_micro >= 1
+
+    def body(params_local, x_local):
+        # params_local: this stage's params (leading stage dim stripped by
+        # shard_map); x_local: (n_micro, mb, ...) — only stage 0's copy is real.
+        stage = jax.lax.axis_index(axis)
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        x_local = x_local[0]
+
+        n_ticks = n_stages + n_micro - 1
+        buf = jnp.zeros_like(x_local[0])                  # current activation
+        outs = jnp.zeros_like(x_local)                    # stage S−1 collects
+
+        def tick(carry, t):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if still available)
+            inject = jnp.where(t < n_micro, t, n_micro - 1)
+            buf = jnp.where(stage == 0,
+                            x_local[inject].astype(buf.dtype), buf)
+            # every stage processes its current buffer
+            y = stage_fn(buf, params_local)
+            # last stage records the finished microbatch (arrives at tick
+            # t = stage_delay + m  → m = t − (n_stages − 1))
+            m = t - (n_stages - 1)
+            valid = (m >= 0) & (m < n_micro)
+            slot = jnp.clip(m, 0, n_micro - 1)
+            outs = jnp.where(
+                (stage == n_stages - 1) & valid,
+                outs.at[slot].set(y.astype(outs.dtype)), outs)
+            # shift activations downstream: stage i → stage i+1
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (buf, outs), jnp.arange(n_ticks))
+        # only the last stage holds real outputs; psum broadcasts them
+        outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)[None]
+
+    # params: stage dim sharded; x: replicated in, result replicated out
+    out = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=P(axis),
+    )(params_stacked, jnp.broadcast_to(x[None], (n_stages,) + x.shape))
+    return out[0]
+
+
+def split_microbatches(batch: jnp.ndarray, n_micro: int) -> jnp.ndarray:
+    b = batch.shape[0]
+    assert b % n_micro == 0
+    return batch.reshape(n_micro, b // n_micro, *batch.shape[1:])

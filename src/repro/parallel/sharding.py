@@ -1,0 +1,292 @@
+"""Logical-axis sharding rules → PartitionSpecs (t5x-style, path-based).
+
+Mesh axes:
+  * "pod"   — outermost data parallelism across pods (multi-pod mesh only);
+  * "data"  — data parallelism + FSDP (params' largest non-TP dim);
+  * "model" — tensor parallelism (heads / d_ff / vocab / experts).
+
+Rules are matched on the parameter path suffix. Every rule is a function of
+the leaf's ndim so the same rule covers unstacked (d_in, d_out), stacked
+(L, d_in, d_out) and group-stacked (G, lpg, d_in, d_out) leaves — the last
+two dims are always (d_in, d_out).
+
+Low-rank (Dobi-SVD) factor leaves get the **low-rank-aware TP** layout:
+column-parallel factors shard W2's output dim over "model"; row-parallel
+factors shard W1's input dim over "model" so the TP all-reduce happens on the
+(tokens, k) bottleneck — collective bytes scale with the compression ratio.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (suffix, (in_axis, out_axis)) for 2D weight leaves; in/out name the mesh axis
+# for (d_in, d_out). "fsdp" resolves to the data axis, "tp" to the model axis.
+_COL_PARALLEL = {"wq", "wk", "wv", "gate", "up", "in_proj"}     # out dim → TP
+_ROW_PARALLEL = {"wo", "down", "out_proj"}                      # in dim  → TP
+
+# low-rank leaf names inside a factored linear dict
+_LR_LEAVES = {"w1", "w2", "u8", "v8", "tail", "su", "sv"}
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def _pad_spec(spec: tuple, ndim: int) -> P:
+    """Left-pad with None for stacking dims (L / (G, lpg) / E)."""
+    pad = ndim - len(spec)
+    return P(*([None] * pad + list(spec)))
+
+
+def param_spec(path, leaf, *, fsdp: bool = True, ep: bool = False) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    ndim = leaf.ndim
+    dp = "data" if fsdp else None
+
+    # --- MoE expert stacks: (..., E, d_in, d_out) --------------------------
+    in_moe = "moe" in names
+    if in_moe and name in ("gate", "up", "down") and not isinstance(leaf, dict):
+        if name in ("gate", "up"):
+            spec = ("model", dp, None) if ep else (None, dp, "model")
+        else:
+            spec = ("model", None, dp) if ep else (None, "model", dp)
+        return _pad_spec(spec, ndim)
+    if in_moe and name == "router":
+        return _pad_spec((None, None), ndim)
+    if in_moe and name in _LR_LEAVES:
+        owner = names[-2]  # gate/up/down
+        return _lowrank_spec(owner, name, ndim, dp, expert_stack=True, ep=ep)
+
+    # --- low-rank factor leaves -------------------------------------------
+    if name in _LR_LEAVES and parent in (_COL_PARALLEL | _ROW_PARALLEL):
+        return _lowrank_spec(parent, name, ndim, dp)
+
+    # --- embeddings / head --------------------------------------------------
+    if name == "embed":
+        return _pad_spec(("model", dp), ndim)
+    if name == "lm_head":
+        return _pad_spec((dp, "model"), ndim)
+    if name in ("enc_pos", "dec_pos"):
+        return _pad_spec((None, None), ndim)
+
+    # --- dense 2D weights ----------------------------------------------------
+    if name in _COL_PARALLEL:
+        return _pad_spec((dp, "model"), ndim)
+    if name in _ROW_PARALLEL:
+        return _pad_spec(("model", dp), ndim)
+
+    # --- mamba small tensors -------------------------------------------------
+    if name == "conv_w":
+        return _pad_spec((None, "model"), ndim)
+    if name in ("conv_b",):
+        return _pad_spec(("model",), ndim)
+    if name in ("a_log", "d_skip", "dt_bias"):
+        return _pad_spec(("model",), ndim)
+    if name == "norm" and "mamba" in names:
+        return _pad_spec(("model",), ndim)
+
+    # --- norms / scalars: replicated ----------------------------------------
+    return P()
+
+
+def _lowrank_spec(owner: str, leaf: str, ndim: int, dp, *,
+                  expert_stack: bool = False, ep: bool = False) -> P:
+    """Sharding for Dobi-SVD factor leaves of a compressed linear.
+
+    col-parallel owner (W: d_in × d_out, d_out sharded):
+        w1 (d_in, k): (dp, None);  w2 (k, d_out): (None, "model")
+    row-parallel owner (d_in sharded):
+        w1 (d_in, k): ("model", None) → partial (tokens, k) → small all-reduce
+        w2 (k, d_out): (None, dp)
+    Remapped leaves follow w1/w2 of their role: u8/tail ~ w1, v8 ~ w2ᵀ,
+    scales replicated.
+    """
+    col = owner in _COL_PARALLEL or owner in ("gate", "up")
+    if leaf in ("su", "sv"):
+        return P()
+    if col:
+        spec = {
+            "w1": (dp, None), "u8": (dp, None), "tail": (dp, None),
+            "w2": (None, "model"), "v8": ("model", None),
+        }[leaf]
+    else:
+        spec = {
+            "w1": ("model", None), "u8": ("model", None), "tail": ("model", None),
+            "w2": (None, dp), "v8": (dp, None),
+        }[leaf]
+    if expert_stack and ep:
+        # experts dim gets the model axis instead of intra-matrix TP
+        repl = tuple(None if a == "model" else a for a in spec)
+        return _pad_spec(("model",) + repl, ndim)
+    return _pad_spec(spec, ndim)
+
+
+def param_specs(params: Any, *, fsdp: bool = True, ep: bool = False) -> Any:
+    """PartitionSpec pytree for a params (or ShapeDtypeStruct) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [param_spec(path, leaf, fsdp=fsdp, ep=ep) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(batch: Any, mesh: Mesh) -> Any:
+    """Shard the leading (batch) dim over all data-parallel axes that divide it."""
+    dp_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        use = []
+        div = 1
+        for a in dp_axes:
+            div *= mesh.shape[a]
+        if b % div == 0 and b >= div:
+            use = dp_axes
+        elif "data" in dp_axes and b % mesh.shape["data"] == 0 and b >= mesh.shape["data"]:
+            use = ["data"]
+        axes = tuple(use) if use else None
+        return P(axes, *([None] * (leaf.ndim - 1))) if leaf.ndim else P()
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_spec(cache: Any, mesh: Mesh, cfg, *, seq_shard: bool = False) -> Any:
+    """KV/state cache specs, matched on known trailing dims from the config.
+
+      attention KV  (..., B, S, KVH, hd):  batch→data axes, KVH→"model";
+                                           with seq_shard (batch=1 long ctx):
+                                           S→"data" (sequence parallelism)
+      mamba state   (..., B, H, P, N):     batch→data axes, H→"model"
+      mamba conv    (..., B, W−1, C):      batch→data axes, C→"model"
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_div = 1
+    for a in dp_axes:
+        dp_div *= mesh.shape[a]
+
+    kv_sig = (cfg.num_kv_heads, cfg.head_dim)
+    ssm_sig = (cfg.ssm_headdim, cfg.ssm_state) if cfg.ssm_state else None
+    conv_ch = (cfg.d_inner + 2 * cfg.ssm_state) if cfg.ssm_state else None
+    model_div = mesh.shape.get("model", 1)
+
+    def spec(leaf):
+        shape = leaf.shape
+        ndim = leaf.ndim
+
+        def batch_axes(b):
+            if b % dp_div == 0 and b >= dp_div:
+                return dp_axes
+            if "data" in dp_axes and b % mesh.shape["data"] == 0 and b >= mesh.shape["data"]:
+                return ("data",)
+            return None
+
+        if ndim >= 4 and tuple(shape[-2:]) == kv_sig:
+            lead = [None] * (ndim - 4)
+            ba = batch_axes(shape[-4])
+            heads_divide = cfg.num_kv_heads % model_div == 0
+            kvh_axis = "model" if heads_divide else None
+            # GQA archs with KVH < model axis: shard the SEQUENCE dim over
+            # "model" instead (distributed-softmax decode; tiny collectives)
+            seq_axis = None
+            if not heads_divide and shape[-3] % model_div == 0:
+                seq_axis = "model"
+            if ba is None and seq_shard and shape[-3] % mesh.shape.get("data", 1) == 0:
+                s_axes = ("data",) if seq_axis is None else ("data", "model")
+                if shape[-3] % (mesh.shape.get("data", 1) * (model_div if seq_axis else 1)) == 0:
+                    return P(*lead, None, s_axes, kvh_axis if seq_axis is None else None, None)
+                return P(*lead, None, "data", kvh_axis, None)
+            return P(*lead, ba, seq_axis, kvh_axis, None)
+        if ssm_sig and ndim >= 4 and tuple(shape[-2:]) == ssm_sig:
+            lead = [None] * (ndim - 4)
+            ba = batch_axes(shape[-4])
+            h_axis = "model" if (cfg.d_inner // cfg.ssm_headdim) % model_div == 0 else None
+            return P(*lead, ba, h_axis, None, None)
+        if conv_ch and ndim >= 3 and shape[-1] == conv_ch:
+            lead = [None] * (ndim - 3)
+            ba = batch_axes(shape[-3])
+            return P(*lead, ba, None, "model" if conv_ch % model_div == 0 else None)
+        return P()
+
+    return jax.tree.map(spec, cache)
+
+
+def make_sharding(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (threaded from the step builders)
+# ---------------------------------------------------------------------------
+# Model code calls `constrain_batch(x)` / `constrain_logits(x)` at propagation
+# anchor points (post-embedding, per-block carry, logits). The mesh is pushed
+# by launch/steps.py at trace time; with no active mesh these are no-ops, so
+# single-device tests/benchmarks are untouched. Axis conventions are fixed:
+# ("pod","data") batch, "model" vocab/features.
+
+import contextlib
+
+_ACTIVE_MESH: list = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    _ACTIVE_MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def _active_mesh():
+    return _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
+
+
+def _dp_axes_for(mesh: Mesh, dim: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    div = 1
+    for a in axes:
+        div *= mesh.shape[a]
+    if axes and dim % div == 0 and dim >= div:
+        return tuple(axes)
+    if "data" in axes and dim % mesh.shape["data"] == 0 and dim >= mesh.shape["data"]:
+        return ("data",)
+    return None
+
+
+def constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
+    """Anchor: batch over data axes, everything else replicated."""
+    mesh = _active_mesh()
+    if mesh is None or x.ndim < 1:
+        return x
+    dp = _dp_axes_for(mesh, x.shape[0])
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_logits(x: jnp.ndarray) -> jnp.ndarray:
+    """Anchor: batch over data axes, vocab over "model"."""
+    mesh = _active_mesh()
+    if mesh is None or x.ndim < 2 or "model" not in mesh.axis_names:
+        return x
+    dp = _dp_axes_for(mesh, x.shape[0])
+    v = x.shape[-1]
+    vaxis = "model" if v % mesh.shape["model"] == 0 else None
+    spec = P(dp, *([None] * (x.ndim - 2)), vaxis)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,4 @@
+from repro.roofline.hlo import (
+    collective_bytes_from_text, roofline_terms, model_flops,
+    param_count, active_param_count,
+)

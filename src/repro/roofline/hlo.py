@@ -1,0 +1,213 @@
+"""Roofline terms from compiled artifacts (no hardware needed).
+
+`compiled.cost_analysis()` is PER-DEVICE (post-SPMD-partitioning) — verified
+empirically: an 8-way sharded matmul reports exactly 1/8 of the global FLOPs.
+So:
+
+    compute term    = flops / PEAK_FLOPS_BF16                  (per chip)
+    memory term     = bytes_accessed / HBM_BW                  (per chip)
+    collective term = Σ collective result-buffer bytes / ICI_BW
+
+collective_bytes sums the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+partitioned HLO. Caveats (documented in EXPERIMENTS.md): result bytes are a
+1×-per-hop proxy for ring-transfer volume (a ring all-reduce moves ≈2× the
+buffer over the slowest link; all-gather result already includes the ×N);
+cross-pod (DCN) hops are charged at ICI rate.
+
+MODEL_FLOPS (the "useful compute" yardstick):
+    train:   6 · N_active · tokens      (fwd 2NT + bwd 4NT)
+    prefill: 2 · N_active · tokens
+    decode:  2 · N_active · batch
+The MODEL_FLOPS / (HLO_FLOPs · chips) ratio exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW_PER_LINK
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_text(hlo_text: str) -> dict[str, Any]:
+    """Sum result-buffer bytes of every collective op in the (partitioned) HLO."""
+    by_op: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _LINE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # `-done` ops repeat the `-start` result; count starts (or plain) only
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        by_op[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {"total": sum(by_op.values()), "by_op": by_op, "counts": counts}
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token
+
+
+def roofline_terms(cost: dict, coll: dict, *, n_chips: int, cfg, shape) -> dict:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_collective = float(coll["total"]) / ICI_BW_PER_LINK
+    terms = {
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_collective,
+    }
+    bound = max(terms, key=terms.get).replace("t_", "")
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_chips, 1.0)
+    t_bound = max(t_compute, t_memory, t_collective)
+    # roofline fraction: useful model compute per chip-second at the bound,
+    # relative to peak — the score §Perf iterates on.
+    frac = (mf / n_chips / PEAK_FLOPS_BF16) / t_bound if t_bound > 0 else 0.0
+    return {
+        **terms,
+        "bound": bound,
+        "model_flops": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (per config)
+# ---------------------------------------------------------------------------
+
+def param_count(cfg) -> int:
+    return _count(cfg, active_only=False)
+
+
+def active_param_count(cfg) -> int:
+    return _count(cfg, active_only=True)
+
+
+def _count(cfg, *, active_only: bool) -> int:
+    d, ff = cfg.d_model, cfg.d_ff
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    attn = d * h * hd * 2 + d * kvh * hd * 2 if h else 0
+    mlp = 3 * d * ff
+    if cfg.family == "moe":
+        e = cfg.num_experts if not active_only else cfg.num_experts_per_tok
+        mlp = 3 * d * ff * e + d * cfg.num_experts          # experts + router
+    total = 0
+    if cfg.family == "ssm":
+        d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+        block = d * d_in_proj + cfg.d_inner * d
+        total = cfg.num_layers * block
+    elif cfg.family == "hybrid":
+        d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads
+        mamba_block = d * d_in_proj + cfg.d_inner * d
+        total = cfg.num_layers * mamba_block
+        n_shared = (cfg.num_layers // cfg.attn_every) if cfg.attn_every else 0
+        shared = attn + mlp     # one param set, applied n_shared times
+        total += shared if not active_only else shared  # weights shared; flops per use
+        if active_only and n_shared > 1:
+            total += shared * (n_shared - 1)            # flops count per invocation
+    else:
+        total = cfg.num_layers * (attn + mlp)
+        if cfg.is_encoder_decoder:
+            enc = (cfg.encoder_layers or cfg.num_layers) * (attn + mlp)
+            xattn = cfg.num_layers * (d * h * hd * 2 + d * kvh * hd * 2)
+            total += enc + xattn
+    total += cfg.vocab_size * d                          # embed
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab_size                      # lm head
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Analytic attention FLOPs (probe correction)
+# ---------------------------------------------------------------------------
+# The cost probes keep the attention KV loop as a lax.scan (unrolling it makes
+# 32k-prefill probe graphs uncompilable on one CPU core), and XLA counts a
+# scan body once — so probe FLOPs miss ≈(1 − 1/n_kv_blocks) of the attention
+# score/PV matmuls. We add the exact analytic count instead; the ≤1/n_kv
+# residual double-count is documented in EXPERIMENTS.md §Methodology.
+
+def attention_flops(cfg, shape) -> float:
+    """Exact QK^T + PV matmul FLOPs for the whole model at this shape."""
+    if cfg.num_heads == 0:
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    h, hd = cfg.num_heads, cfg.head_dim
+    w = cfg.sliding_window
+
+    def pairs(full_attention: bool) -> float:
+        if shape.kind == "decode":
+            return float(min(s, s if full_attention or not w else w))  # per step
+        if full_attention or not w:
+            return s * (s + 1) / 2.0          # causal lower triangle
+        return float(s) * min(w, s)           # sliding window band
+
+    def layer_flops(full_attn: bool) -> float:
+        p = pairs(full_attn)
+        return 4.0 * b * h * hd * p           # 2 matmuls × 2 flops/MAC
+
+    if cfg.global_every > 1:
+        g = cfg.num_layers // cfg.global_every
+        locals_ = cfg.num_layers - g
+        total = locals_ * layer_flops(False) + g * layer_flops(True)
+    elif cfg.family == "hybrid" and cfg.attn_every:
+        n_attn = cfg.num_layers // cfg.attn_every
+        total = n_attn * layer_flops(w == 0)
+    elif cfg.family == "ssm":
+        total = 0.0
+    elif cfg.is_encoder_decoder:
+        enc = (cfg.encoder_layers or cfg.num_layers)
+        t_src = cfg.max_source_positions
+        s_dec = min(s, cfg.max_seq_len)
+        enc_f = enc * 4.0 * b * h * hd * t_src * t_src
+        self_f = cfg.num_layers * 4.0 * b * h * hd * (
+            1.0 * s_dec if shape.kind == "decode" else s_dec * (s_dec + 1) / 2.0)
+        cross_f = cfg.num_layers * 4.0 * b * h * hd * t_src * (
+            1.0 if shape.kind == "decode" else s_dec)
+        if shape.kind == "decode":
+            enc_f = 0.0                      # encoder ran at prefill
+        total = enc_f + self_f + cross_f
+    else:
+        total = cfg.num_layers * layer_flops(cfg.sliding_window == 0)
+    if shape.kind == "train":
+        total *= 4.0                          # fwd + remat-recompute + bwd(2×)
+    return total

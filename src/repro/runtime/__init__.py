@@ -1,0 +1,3 @@
+from repro.runtime.preemption import PreemptionGuard
+from repro.runtime.failures import HeartbeatMonitor, NodeState
+from repro.runtime.metrics import MetricsLogger

@@ -1,0 +1,46 @@
+"""Elastic scaling: rebuild the mesh for the devices that are actually alive
+and reshard the training state onto it.
+
+Real flow on a pod: jax.distributed re-initializes after a node failure with
+a smaller process set → `choose_mesh_shape` picks the largest valid
+(data, model) grid → `reshard_state` device_puts the committed checkpoint
+onto the new shardings (the checkpointer stores full arrays, so any target
+topology works). On CPU we exercise the same code paths with
+xla_force_host_platform_device_count (see tests/test_elastic.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel import sharding as shardlib
+
+
+def choose_mesh_shape(n_devices: int, *, model_parallel: int) -> tuple[int, ...]:
+    """Largest (data, model) grid for the surviving device count.
+
+    Keeps model-parallel degree if possible (params were sharded for it);
+    degrades it to the largest divisor otherwise.
+    """
+    mp = model_parallel
+    while mp > 1 and n_devices % mp != 0:
+        mp //= 2
+    return (n_devices // mp, mp)
+
+
+def make_mesh_for_devices(devices=None, *, model_parallel: int = 1) -> Mesh:
+    devices = list(devices if devices is not None else jax.devices())
+    shape = choose_mesh_shape(len(devices), model_parallel=model_parallel)
+    import numpy as np
+    arr = np.array(devices[: shape[0] * shape[1]]).reshape(shape)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """device_put a (host or differently-sharded) state onto `mesh`."""
+    specs = shardlib.param_specs(state, fsdp=fsdp)
+    shardings = shardlib.make_sharding(mesh, specs)
+    return jax.tree.map(jax.device_put, state, shardings)

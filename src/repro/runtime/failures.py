@@ -1,0 +1,59 @@
+"""Heartbeats and straggler mitigation (policy layer; transport simulated).
+
+On a real pod the heartbeat transport is the coordination service
+(jax.distributed / GCS); here the monitor is fed timestamps directly so the
+*policies* — failure detection thresholds, straggler scoring, restart vs
+drop-node decisions — are exercised by tests, and the training loop wiring
+(`TrainSupervisor`) is the same code a real deployment would run.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+
+
+class NodeState(Enum):
+    HEALTHY = "healthy"
+    STRAGGLER = "straggler"
+    DEAD = "dead"
+
+
+@dataclass
+class HeartbeatMonitor:
+    n_nodes: int
+    dead_after_s: float = 60.0
+    straggler_factor: float = 2.0       # step time > factor × median → straggler
+    last_beat: dict[int, float] = field(default_factory=dict)
+    step_times: dict[int, float] = field(default_factory=dict)
+
+    def beat(self, node: int, step_time_s: float, now: float | None = None) -> None:
+        now = time.monotonic() if now is None else now
+        self.last_beat[node] = now
+        self.step_times[node] = step_time_s
+
+    def states(self, now: float | None = None) -> dict[int, NodeState]:
+        now = time.monotonic() if now is None else now
+        times = sorted(self.step_times.values())
+        median = times[len(times) // 2] if times else 0.0
+        out = {}
+        for node in range(self.n_nodes):
+            beat = self.last_beat.get(node)
+            if beat is None or now - beat > self.dead_after_s:
+                out[node] = NodeState.DEAD
+            elif median > 0 and self.step_times.get(node, 0.0) > self.straggler_factor * median:
+                out[node] = NodeState.STRAGGLER
+            else:
+                out[node] = NodeState.HEALTHY
+        return out
+
+    def decide(self, now: float | None = None) -> str:
+        """Policy: any DEAD node → elastic restart; persistent stragglers →
+        advise rebalancing (microbatch reassignment); else continue."""
+        st = self.states(now)
+        if any(s is NodeState.DEAD for s in st.values()):
+            return "restart_elastic"
+        if sum(s is NodeState.STRAGGLER for s in st.values()) >= max(1, self.n_nodes // 8):
+            return "rebalance"
+        return "continue"

@@ -1,0 +1,22 @@
+"""JSONL metrics logger (one line per step; cheap, greppable, restart-safe)."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+class MetricsLogger:
+    def __init__(self, path: str):
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._f = open(path, "a", buffering=1)
+
+    def log(self, step: int, **values) -> None:
+        rec = {"step": step, "t": time.time()}
+        for k, v in values.items():
+            rec[k] = float(v) if hasattr(v, "__float__") else v
+        self._f.write(json.dumps(rec) + "\n")
+
+    def close(self) -> None:
+        self._f.close()

@@ -1,0 +1,100 @@
+"""Attention: blockwise-flash vs direct oracle, window masks, decode + ring
+cache, GQA expansion. Hypothesis sweeps over shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+def _qkv(key, b, s, h, kvh, d):
+    q = jax.random.normal(key, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kvh, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kvh, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("block_skip", [True, False])
+def test_blockwise_matches_full(window, block_skip):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 32, 4, 2, 16)
+    ref = L.full_attention(q, k, v, causal=True, window=window)
+    out = L.blockwise_attention(q, k, v, causal=True, window=window,
+                                block_q=8, block_kv=8, block_skip=block_skip)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_blockwise_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 16, 2, 2, 8)
+    ref = L.full_attention(q, k, v, causal=False)
+    out = L.blockwise_attention(q, k, v, causal=False, block_q=4, block_kv=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([16, 24, 32]),
+    bq=st.sampled_from([4, 8]),
+    h=st.sampled_from([2, 4]),
+    kvh=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 4, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_blockwise_property(s, bq, h, kvh, window, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, s, h, kvh, 8)
+    ref = L.full_attention(q, k, v, causal=True, window=window)
+    out = L.blockwise_attention(q, k, v, causal=True, window=window,
+                                block_q=bq, block_kv=bq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_decode_matches_full_last_position():
+    key = jax.random.PRNGKey(2)
+    b, s, h, kvh, d = 2, 12, 4, 2, 8
+    q, k, v = _qkv(key, b, s, h, kvh, d)
+    full = L.full_attention(q, k, v, causal=True)
+    out = L.decode_attention(q[:, -1:], k, v, length=s)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+def test_decode_window_limits_context():
+    key = jax.random.PRNGKey(3)
+    b, s, h, kvh, d = 1, 16, 2, 2, 8
+    q, k, v = _qkv(key, b, s, h, kvh, d)
+    w = 4
+    full = L.full_attention(q, k, v, causal=True, window=w)
+    out = L.decode_attention(q[:, -1:], k, v, length=s, window=w)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(full[:, -1]),
+                               atol=2e-5)
+
+
+def test_gqa_expansion_equals_explicit_repeat():
+    key = jax.random.PRNGKey(4)
+    q, k, v = _qkv(key, 1, 8, 4, 2, 8)
+    ref = L.full_attention(q, jnp.repeat(k, 2, axis=2), jnp.repeat(v, 2, axis=2),
+                           causal=True)
+    out = L.full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relativity():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (1, 6, 2, 16))
+    cos, sin = L.rope_frequencies(16, 1e4, jnp.arange(6))
+    y = L.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), atol=1e-4)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+    k = jax.random.normal(jax.random.fold_in(key, 2), (16,))
+    def dot_at(i, j):
+        cq, sq = L.rope_frequencies(16, 1e4, jnp.asarray([i]))
+        ck, sk = L.rope_frequencies(16, 1e4, jnp.asarray([j]))
+        qr = L.apply_rope(q[None, None, None, :], cq, sq)[0, 0, 0]
+        kr = L.apply_rope(k[None, None, None, :], ck, sk)[0, 0, 0]
+        return float(qr @ kr)
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-3

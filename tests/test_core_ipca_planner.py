@@ -1,0 +1,100 @@
+"""core.ipca + core.planner: subspace optimality, memory scaling, rank plans."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ipca as I
+from repro.core import planner as P
+
+
+def _batch_bases(key, n, k_i, batches, shared_rank):
+    base = jax.random.normal(key, (n, shared_rank))
+    out = []
+    for i in range(batches):
+        noise = 0.05 * jax.random.normal(jax.random.fold_in(key, i), (n, k_i))
+        q, _ = jnp.linalg.qr(base @ jax.random.normal(
+            jax.random.fold_in(key, 100 + i), (shared_rank, k_i)) + noise)
+        out.append(q[:, :k_i])
+    return jnp.stack(out)
+
+
+def test_ipca_matches_pca_objective():
+    v_stack = _batch_bases(jax.random.PRNGKey(0), 40, 8, 6, shared_rank=8)
+    v_ipca = I.ipca_fit(v_stack, 8)
+    v_pca = I.pca_fit(v_stack, 8)
+    oi = float(I.subspace_objective(v_ipca, v_stack))
+    op = float(I.subspace_objective(v_pca, v_stack))
+    assert oi >= 0.98 * op
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pca_objective_beats_random_subspace(seed):
+    v_stack = _batch_bases(jax.random.PRNGKey(seed), 30, 6, 4, shared_rank=6)
+    v_pca = I.pca_fit(v_stack, 6)
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed + 1), (30, 6)))
+    assert float(I.subspace_objective(v_pca, v_stack)) >= \
+        float(I.subspace_objective(q, v_stack)) - 1e-4
+
+
+def test_update_weight_reduces_activation_error():
+    """W̃ = W V Vᵀ with the IPCA basis approximates A better than a random
+    rank-k update (paper Eq. 5 objective)."""
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (24, 16))
+    xs = [jax.random.normal(jax.random.fold_in(key, i), (32, 24)) for i in range(4)]
+    k = 6
+    v_list = jnp.stack([I.activation_basis(x @ w, k) for x in xs])
+    v = I.ipca_fit(v_list, k)
+    w_tilde = I.update_weight(w, v[:, :k])
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 99), (16, k)))
+    w_rand = I.update_weight(w, q)
+    err = sum(float(jnp.linalg.norm(x @ w - x @ w_tilde)) for x in xs)
+    err_rand = sum(float(jnp.linalg.norm(x @ w - x @ w_rand)) for x in xs)
+    assert err < err_rand
+
+
+def test_ipca_memory_constant_vs_pca_linear():
+    m1 = I.ipca_memory_bytes(4096, 64, 64)
+    m2 = I.ipca_memory_bytes(4096, 64, 64)      # independent of stream length
+    p16 = I.pca_memory_bytes(4096, 64, 16)
+    p64 = I.pca_memory_bytes(4096, 64, 64)
+    assert m1 == m2
+    assert p64 > 3 * p16
+    assert m1 < p16
+
+
+# ------------------------------------------------------------------ planner
+
+def _specs():
+    return [P.MatrixSpec("a", 64, 64), P.MatrixSpec("b", 128, 32),
+            P.MatrixSpec("c", 32, 96)]
+
+
+def test_plan_uniform_meets_budget():
+    specs = _specs()
+    for ratio in (0.3, 0.5, 0.8):
+        ks = P.plan_uniform(specs, ratio, remap=True)
+        assert P.achieved_ratio(specs, ks, remap=True) <= ratio + 1e-6
+
+
+def test_waterfill_prefers_heavy_spectra():
+    specs = [P.MatrixSpec("flat", 64, 64), P.MatrixSpec("spiky", 64, 64)]
+    flat = np.ones(64)
+    spiky = np.concatenate([np.full(8, 10.0), np.full(56, 0.01)])
+    ks = P.plan_energy_waterfill(specs, [flat, spiky], 0.25, remap=True)
+    # spiky matrix's useful ranks grabbed first, then budget flows to flat
+    assert ks[1] >= 8
+    assert P.achieved_ratio(specs, ks, remap=True) <= 0.25 + 1e-6
+
+
+def test_plan_from_trained_k_budget_and_order():
+    specs = _specs()
+    soft = [40.0, 20.0, 10.0]
+    ks = P.plan_from_trained_k(specs, soft, 0.5, remap=True)
+    assert P.achieved_ratio(specs, ks, remap=True) <= 0.5 + 1e-6
+    assert all(k >= 1 for k in ks)
+    # ordering preserved: matrix with larger soft-k keeps more ranks
+    assert ks[0] >= ks[1] >= ks[2] - 1

@@ -1,0 +1,96 @@
+"""core.truncation + core.remap: soft gates, ratio bijection, mixed-precision
+storage roundtrip and exact byte accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import truncation as T
+from repro.core import remap as R
+
+
+# ------------------------------------------------------------- truncation
+
+def test_soft_gate_limits():
+    g = T.soft_gate(jnp.asarray(5.0), 10, beta=100.0)
+    np.testing.assert_allclose(np.asarray(g[:4]), 1.0, atol=1e-3)   # i=1..4 < k
+    np.testing.assert_allclose(np.asarray(g[6:]), 0.0, atol=1e-3)   # i=7.. > k
+
+
+def test_theta_k_roundtrip():
+    ks = jnp.asarray([1.0, 17.3, 99.0])
+    r_max = jnp.asarray([128.0, 128.0, 128.0])
+    theta = T.k_to_theta(ks, r_max)
+    back = T.theta_to_k(theta, r_max)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(ks), rtol=1e-4)
+
+
+def test_gate_gradient_flows():
+    def f(k):
+        return jnp.sum(T.soft_truncate(jnp.linspace(1, 0.1, 16), k, beta=10.0))
+    g = jax.grad(f)(jnp.asarray(8.0))
+    assert float(g) > 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=st.integers(2, 512), n=st.integers(2, 512))
+def test_ratio_bijection_property(m, n):
+    """Remapped ratio covers (0, 1] with k ∈ [1, min(m,n)] — the paper's
+    bijection; classic storage cannot reach ratio 1 without k > mn/(m+n)."""
+    r_full = float(T.matrix_ratio(jnp.asarray(float(min(m, n))), m, n, remap=True))
+    assert abs(r_full - 1.0) < 1e-6
+    k_budget = T.max_k_for_ratio(1.0, m, n, remap=False)
+    assert k_budget <= (m * n) // (m + n)
+
+
+def test_model_ratio_aggregation():
+    shapes = jnp.asarray([[64, 64], [128, 32]])
+    ks = jnp.asarray([32.0, 16.0])
+    r = float(T.model_ratio(ks, shapes, remap=True))
+    expected = (32 * 64 + 16 * 128) / (64 * 64 + 128 * 32)
+    assert abs(r - expected) < 1e-6
+
+
+# ------------------------------------------------------------------ remap
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(8, 96), n=st.integers(8, 96),
+    frac=st.floats(0.2, 0.9), seed=st.integers(0, 2**31 - 1),
+)
+def test_remap_roundtrip_and_bytes(m, n, frac, seed):
+    key = jax.random.PRNGKey(seed)
+    k = max(1, int(frac * min(m, n)))
+    u = jax.random.normal(key, (m, k))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    w = u @ v                                      # exactly rank k
+    rw = R.remap_compress(w, k)
+    rec = R.remap_reconstruct(rw)
+    rel = float(jnp.linalg.norm(rec - w) / jnp.linalg.norm(w))
+    assert rel < 0.05, f"remap roundtrip rel err {rel}"
+    # exact 16-bit-slot accounting: k · max(m,n) slots + fp32 scales
+    slots = R.packed_view(rw).size
+    assert slots == k * max(m, n)
+    assert R.remap_bytes(rw) == 2 * slots + 8 * k
+
+
+def test_pack_unpack_exact():
+    w = jax.random.normal(jax.random.PRNGKey(0), (24, 40))
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    w8 = (u[:, :8] * s[:8]) @ vt[:8]
+    rw = R.remap_compress(w8, 8)
+    buf = R.packed_view(rw)
+    rw2 = R.unpack_view(buf, rw)
+    assert bool(jnp.all(rw2.u8 == rw.u8))
+    assert bool(jnp.all(rw2.v8 == rw.v8))
+    assert bool(jnp.all(rw2.tail == rw.tail))
+
+
+def test_quantize_int8_error_small_on_gaussian():
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, 64)) * 0.02
+    q, sc = R.quantize_int8(x, axis=0)
+    deq = R.dequantize_int8(q, sc, axis=0, dtype=jnp.float32)
+    mse = float(jnp.mean((deq - x) ** 2))
+    assert mse < 1e-7     # paper Table 15 magnitude

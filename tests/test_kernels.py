@@ -1,0 +1,101 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.core import remap as R
+
+
+SHAPES = [
+    (64, 128, 16, 96),       # (M, K, R, N) small
+    (200, 300, 70, 150),     # non-aligned
+    (128, 512, 128, 256),    # tile-aligned
+    (13, 700, 33, 81),       # awkward primes
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_lowrank_matmul_sweep(shape, dtype):
+    m, k, r, n = shape
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    w1 = (jax.random.normal(jax.random.fold_in(key, 1), (k, r)) / np.sqrt(k)).astype(dtype)
+    w2 = (jax.random.normal(jax.random.fold_in(key, 2), (r, n)) / np.sqrt(r)).astype(dtype)
+    y_ref = ref.lowrank_matmul_ref(x, w1, w2)
+    y_pal = ops.lowrank_matmul(x, w1, w2, use_pallas=True, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(y_pal, np.float32), np.asarray(y_ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("scale_axis", ["n", "k"])
+@pytest.mark.parametrize("shape", [(64, 128, 96), (100, 260, 130)])
+def test_dequant_matmul_sweep(scale_axis, shape):
+    m, k, n = shape
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128, jnp.int8)
+    sdim = n if scale_axis == "n" else k
+    sc = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (sdim,))) / 100 + 1e-3
+    if scale_axis == "n":
+        y_ref = ref.dequant_matmul_ref(x, wq, sc)
+    else:
+        y_ref = x @ (wq.astype(jnp.float32) * sc[:, None])
+    y_pal = ops.dequant_matmul(x, wq, sc, scale_axis=scale_axis,
+                               use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("mn", [(96, 64), (64, 96), (80, 80)])  # tall/wide/square
+def test_quant_lowrank_both_orientations(mn):
+    m, n = mn
+    k = 24
+    key = jax.random.PRNGKey(1)
+    w = (jax.random.normal(key, (m, k)) @ jax.random.normal(
+        jax.random.fold_in(key, 1), (k, n))) / np.sqrt(k)
+    rw = R.remap_compress(w, k)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (32, m), jnp.float32)
+    y_exact = x @ R.remap_reconstruct(rw, jnp.float32)
+    y_ref = ref.quant_lowrank_matmul_ref(x, rw.u8, rw.tail, rw.v8, rw.su, rw.sv)
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_exact), atol=1e-2, rtol=1e-2)
+    y_pal = ops.quant_lowrank_matmul(x, rw.u8, rw.tail, rw.v8, rw.su, rw.sv,
+                                     use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32), atol=1e-2, rtol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(8, 80), k=st.integers(16, 200),
+    r=st.integers(4, 48), n=st.integers(8, 120),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_matmul_property(m, k, r, n, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (m, k))
+    w1 = jax.random.normal(jax.random.fold_in(key, 1), (k, r)) / np.sqrt(k)
+    w2 = jax.random.normal(jax.random.fold_in(key, 2), (r, n)) / np.sqrt(r)
+    y_ref = ref.lowrank_matmul_ref(x, w1, w2)
+    y_pal = ops.lowrank_matmul(x, w1, w2, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_batched_leading_dims():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (3, 5, 64))
+    w1 = jax.random.normal(jax.random.fold_in(key, 1), (64, 16)) / 8
+    w2 = jax.random.normal(jax.random.fold_in(key, 2), (16, 32)) / 4
+    y = ops.lowrank_matmul(x, w1, w2, use_pallas=True, interpret=True)
+    assert y.shape == (3, 5, 32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref.lowrank_matmul_ref(x, w1, w2)),
+                               atol=1e-4, rtol=1e-4)

@@ -1,0 +1,111 @@
+"""Model-level compression integration: mirrored-forward parity, compressed
+forward validity per family, rank training gradient flow, ratio targets."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import rank_training as rt
+from repro.models import transformer as T
+from repro.models import compression as C
+
+BASE = dict(d_model=64, num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+            dtype="float32", remat="none")
+
+FAMILIES = {
+    "dense": dict(num_layers=3, qk_norm=True),
+    "moe": dict(num_layers=2, num_experts=4, num_experts_per_tok=2,
+                moe_capacity_factor=8.0),
+    "ssm": dict(num_layers=3, ssm_state=16, ssm_headdim=16, ssm_chunk=8),
+    "hybrid": dict(num_layers=4, ssm_state=16, ssm_headdim=16, ssm_chunk=8,
+                   attn_every=2),
+    "gemma": dict(num_layers=7, sliding_window=8, global_every=3),
+}
+
+
+def _cfg(fam):
+    family = "dense" if fam == "gemma" else fam
+    return ModelConfig(name=fam, family=family, **BASE, **FAMILIES[fam])
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_mirrored_forward_matches_scanned(fam):
+    cfg = _cfg(fam)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+    lg_scan, _ = T.forward(params, toks, cfg)
+    lg_mirror = C.mirrored_forward(params, toks, cfg)
+    np.testing.assert_allclose(np.asarray(lg_scan), np.asarray(lg_mirror),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+@pytest.mark.parametrize("quantize", [False, True])
+def test_compress_model_runs_and_hits_ratio(fam, quantize):
+    cfg = _cfg(fam)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batches = [jax.random.randint(jax.random.PRNGKey(i + 5), (2, 16),
+                                  0, cfg.vocab_size) for i in range(2)]
+    method = "dobi" if quantize else "dobi_noremap"
+    cparams, kmap = C.compress_model_params(
+        params, cfg, batches, 0.5, method=method, quantize=quantize)
+    toks = batches[0]
+    lg, _ = T.forward(cparams, toks, cfg)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert len(kmap) > 0
+    assert all(k >= 1 for k in kmap.values())
+
+
+def test_rank_training_moves_ratio_to_target():
+    cfg = _cfg("dense")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    shapes_map = C.eligible_matrix_shapes(params, cfg)
+    names = sorted(shapes_map)
+    shapes = jnp.asarray([shapes_map[nm] for nm in names], jnp.int32)
+    loss_fn = C.build_rank_train_loss(params, cfg, names, svd_rank_cap=24)
+    # start FAR from target so the ratio penalty has to do work
+    theta0 = rt.init_theta(shapes, 0.9)
+    batches = ({"tokens": jax.random.randint(jax.random.PRNGKey(i), (2, 16),
+                                             0, cfg.vocab_size),
+                "targets": jax.random.randint(jax.random.PRNGKey(i + 50), (2, 16),
+                                              0, cfg.vocab_size)}
+               for i in range(100))
+    res = rt.train_ranks(loss_fn, theta0, shapes, batches,
+                         rt.RankTrainConfig(target_ratio=0.4, steps=15, lr=0.3))
+    assert abs(res.trace[-1]["r_now"] - 0.4) < abs(res.trace[0]["r_now"] - 0.4), \
+        "ratio penalty did not move R_now toward target"
+    assert np.all(np.isfinite(res.soft_ks))
+
+
+def test_rank_training_gradient_flows_through_svd():
+    cfg = _cfg("dense")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    shapes_map = C.eligible_matrix_shapes(params, cfg)
+    names = sorted(shapes_map)
+    shapes = jnp.asarray([shapes_map[nm] for nm in names], jnp.int32)
+    loss_fn = C.build_rank_train_loss(params, cfg, names, svd_rank_cap=16)
+    theta = rt.init_theta(shapes, 0.3)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(0), (2, 12),
+                                          0, cfg.vocab_size),
+             "targets": jax.random.randint(jax.random.PRNGKey(1), (2, 12),
+                                           0, cfg.vocab_size)}
+    g = jax.grad(loss_fn)(theta, batch)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.abs(g).max()) > 0, "no gradient reached θ through the SVD"
+
+
+def test_compressed_decode_still_consistent():
+    cfg = _cfg("dense")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batches = [jax.random.randint(jax.random.PRNGKey(9), (2, 16), 0, cfg.vocab_size)]
+    cparams, _ = C.compress_model_params(params, cfg, batches, 0.6,
+                                         method="dobi_noremap", quantize=False)
+    toks = batches[0]
+    logits, _ = T.forward(cparams, toks, cfg)
+    cache = T.init_cache(cparams, cfg, 2, max_len=32, dtype=jnp.float32)
+    _, cache = T.prefill(cparams, toks[:, :15], cfg, cache)
+    lg, _ = T.decode_step(cparams, toks[:, 15], cfg, cache, 15)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[:, -1]),
+                               atol=1e-3)

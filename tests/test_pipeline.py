@@ -1,0 +1,46 @@
+"""Pipeline parallelism correctness: GPipe schedule == sequential stack."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    code = """
+    import jax, jax.numpy as jnp
+    from repro.parallel.pipeline import pipeline_forward, split_microbatches
+
+    n_stages, layers_per_stage, d = 4, 2, 16
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (n_stages, layers_per_stage, d, d)) / jnp.sqrt(d)
+
+    def stage_fn(x, wstage):
+        for i in range(layers_per_stage):
+            x = jnp.tanh(x @ wstage[i])
+        return x
+
+    x = jax.random.normal(jax.random.fold_in(key, 1), (8, 4, d))
+    xm = split_microbatches(x, 4)
+
+    # sequential reference
+    ref = x
+    for s in range(n_stages):
+        ref = stage_fn(ref, ws[s])
+
+    mesh = jax.make_mesh((4,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    out = pipeline_forward(stage_fn, ws, xm, mesh)
+    out_flat = out.reshape(8, 4, d)
+    err = float(jnp.abs(out_flat - ref).max())
+    assert err < 1e-5, err
+    print("pipeline == sequential, err", err)
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"

@@ -1,0 +1,107 @@
+"""Sharding metadata tests (cheap — no compilation): every sharded dim of
+every full-config param/optimizer/cache leaf divides its mesh axes, for both
+production meshes. Catches config/mesh incompatibilities without compiling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.models import build
+from repro.models.compression import compressed_param_specs
+from repro.parallel import sharding as shardlib
+
+
+class FakeMesh:
+    """Mesh metadata stand-in (no devices needed for divisibility checks)."""
+
+    def __init__(self, multi_pod: bool):
+        if multi_pod:
+            self.axis_names = ("pod", "data", "model")
+            self.shape = {"pod": 2, "data": 16, "model": 16}
+        else:
+            self.axis_names = ("data", "model")
+            self.shape = {"data": 16, "model": 16}
+
+
+def _check_divisible(spec_tree, leaf_tree, mesh, what):
+    flat_specs = jax.tree_util.tree_leaves(spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_leaves = jax.tree_util.tree_leaves(leaf_tree)
+    assert len(flat_specs) == len(flat_leaves)
+    bad = []
+    for spec, leaf in zip(flat_specs, flat_leaves):
+        for dim, axes in zip(leaf.shape, tuple(spec) + (None,) * (leaf.ndim - len(spec))):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            div = 1
+            for a in axes:
+                div *= mesh.shape[a]
+            if dim % div != 0:
+                bad.append((what, leaf.shape, tuple(spec), dim, div))
+    assert not bad, f"non-divisible shardings: {bad[:5]}"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_and_opt_specs_divisible(arch, multi_pod):
+    cfg = get_config(arch)
+    bundle = build(cfg)
+    mesh = FakeMesh(multi_pod)
+    pspec_tree = bundle.param_specs()
+    specs = shardlib.param_specs(pspec_tree)
+    _check_divisible(specs, pspec_tree, mesh, f"{arch} params")
+
+    ocfg = optim.AdamWConfig()
+    ostate = jax.eval_shape(lambda p: optim.init(p, ocfg), pspec_tree)
+    ospecs = shardlib.param_specs(ostate)
+    _check_divisible(ospecs, ostate, mesh, f"{arch} opt")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "gemma3-27b", "mamba2-2.7b",
+                                  "zamba2-2.7b", "whisper-base"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    bundle = build(cfg)
+    mesh = FakeMesh(False)
+    for shape_name in ("decode_32k", "long_500k"):
+        shape = SHAPES[shape_name]
+        if shape_name == "long_500k" and not cfg.supports_long_context:
+            continue
+        if cfg.family == "audio" and shape_name == "long_500k":
+            continue
+        cache = bundle.cache_specs(shape.global_batch, shape.seq_len)
+        specs = shardlib.cache_spec(cache, _MeshAdapter(mesh), cfg,
+                                    seq_shard=shape.global_batch < 16)
+        _check_divisible(specs, cache, mesh, f"{arch} cache {shape_name}")
+
+
+class _MeshAdapter:
+    def __init__(self, fake):
+        self.axis_names = fake.axis_names
+        self.shape = fake.shape
+
+
+def test_compressed_param_specs_divisible():
+    cfg = get_config("qwen3-14b")
+    bundle = build(cfg)
+    mesh = FakeMesh(False)
+    cspec_tree = compressed_param_specs(bundle.param_specs(), cfg, 0.4)
+    specs = shardlib.param_specs(cspec_tree)
+    _check_divisible(specs, cspec_tree, mesh, "compressed params")
+
+
+def test_lowrank_tp_layout():
+    """Beyond-paper low-rank TP: row-parallel factors put 'model' on W1's
+    input dim so the all-reduce happens on the (tokens, k) intermediate."""
+    spec_w1 = shardlib._lowrank_spec("down", "w1", 2, "data")
+    spec_w2 = shardlib._lowrank_spec("down", "w2", 2, "data")
+    assert tuple(spec_w1) == ("model", None)
+    assert tuple(spec_w2) == (None, "data")
+    spec_w1c = shardlib._lowrank_spec("up", "w1", 2, "data")
+    spec_w2c = shardlib._lowrank_spec("up", "w2", 2, "data")
+    assert tuple(spec_w1c) == ("data", None)
+    assert tuple(spec_w2c) == (None, "model")
