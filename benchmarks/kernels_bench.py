@@ -26,6 +26,38 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6  # µs
 
 
+def blocksize_sweep(M: int = 256, K: int = 1024, N: int = 512, r: int = 128):
+    """bm/bk/bn tile sweep for the fused low-rank kernel, interpret mode.
+
+    Interpret-mode wall-clock is NOT kernel performance (the container has no
+    TPU); the sweep pins correctness of every tile choice and records the
+    derived VMEM working set per tile so decode-kernel tile picks are on file
+    next to the BENCH_decode numbers.
+    """
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w1 = jax.random.normal(key, (K, r), jnp.float32) / 45
+    w2 = jax.random.normal(key, (r, N), jnp.float32) / 12
+    y_ref = ref.lowrank_matmul_ref(x, w1, w2)
+
+    print(f"\n# lowrank tile sweep (interpret mode): M={M} K={K} N={N} r={r}")
+    rows = []
+    for bm in (64, 128):
+        for bk in (256, 512):
+            for bn in (128, 256):
+                y = ops.lowrank_matmul(x, w1, w2, use_pallas=True,
+                                       interpret=True, bm=bm, bk=bk, bn=bn)
+                err = float(jnp.abs(y_ref - y).max())
+                assert err < 1e-3, f"tile bm{bm}/bk{bk}/bn{bn} mismatch: {err}"
+                # mirrors the VMEM model in kernels/lowrank_matmul.py
+                vmem = (bm * bk * 2 + bk * r * 2 + r * bn * 2
+                        + bm * r * 4 + bm * bn * 2) / 2**20
+                rows.append((f"lowrank_bm{bm}_bk{bk}_bn{bn}", err, vmem))
+                print(f"  bm={bm:<4d} bk={bk:<4d} bn={bn:<4d} "
+                      f"max|err|={err:.2e}  VMEM {vmem:5.2f} MiB")
+    return rows
+
+
 def main():
     key = jax.random.PRNGKey(0)
     rows = []
@@ -72,6 +104,9 @@ def main():
     print(f"  [derived] fused kernel VMEM working set @bm{bm}/bk{bk}/bn{bn}/r{rr}: "
           f"{vmem:.1f} MiB (≤16 MiB v5e)")
     rows.append(("fused_vmem_mib", 0.0, f"{vmem:.1f}"))
+
+    for nm, err, vmem in blocksize_sweep():
+        rows.append((nm, 0.0, f"err{err:.1e}/vmem{vmem:.2f}MiB"))
 
     print("\nname,us_per_call,derived")
     for nm, t, d in rows:

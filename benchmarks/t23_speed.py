@@ -14,16 +14,22 @@ the quantities that *determine* them:
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
+from repro.launch.serve import generate
 from repro.models import build
 from repro.models.compression import compress_model_params
 from repro.roofline.hlo import param_count
 from repro.configs import get_config
+
+BENCH_DECODE_PATH = os.path.join(os.path.dirname(__file__), "BENCH_decode.json")
 
 
 def flops_per_token(cfg, ratio: float | None) -> float:
@@ -65,6 +71,73 @@ def run_host_timing(gen_tokens: int = 8):
     return rows
 
 
+def run_decode_loop_bench(gen_len: int = 64, batch: int = 1, prompt_len: int = 16,
+                          repeats: int = 9, max_len: int = 512):
+    """Fused (single-dispatch lax.scan, donated caches) vs per-step decode.
+
+    Single-stream (batch=1) host wall-clock on the proxy model — the host
+    analogue of the paper's single-GPU T23 decode claim. The KV cache is
+    preallocated at `max_len` (a server sizes it for the longest request it
+    accepts): the per-step loop then copies the whole cache across every
+    undonated dispatch, while the fused loop's donated scan carry is updated
+    one token slot in place — the copy the donation exists to remove. Layer
+    application is unrolled (scan_layers=False): at proxy depth the nested
+    layer while-loop is pure overhead for both loop modes.
+    Writes BENCH_decode.json.
+    """
+    cfg, params, _ = common.train_proxy_model()
+    serve_cfg = cfg.with_overrides(scan_layers=False)
+    bundle = build(serve_cfg)
+    calib = common.calib_batches(cfg, n=2)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                0, cfg.vocab_size)
+    rows = []
+    for ratio in (None, 0.8, 0.6, 0.4):
+        p = params
+        if ratio is not None:
+            p, _ = compress_model_params(params, cfg, calib, ratio,
+                                         method="dobi_noremap", quantize=False)
+        toks = {}
+        for mode in ("step", "fused"):   # compile both before timing
+            toks[mode], _ = generate(bundle, p, prompt, gen_len, max_len=max_len,
+                                     cache_dtype=jnp.float32, loop_mode=mode)
+        # interleave the two loop modes so background-load drift on a shared
+        # box hits both equally; the paired ratio is the robust statistic
+        pairs = []
+        for _ in range(repeats):
+            s = generate(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
+                         loop_mode="step", max_len=max_len)[1]["decode_s"]
+            f = generate(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
+                         loop_mode="fused", max_len=max_len)[1]["decode_s"]
+            pairs.append((s, f))
+        steps = np.array([p_[0] for p_ in pairs])
+        fused = np.array([p_[1] for p_ in pairs])
+        identical = bool(np.array_equal(np.asarray(toks["step"]),
+                                        np.asarray(toks["fused"])))
+        rows.append({
+            "ratio": ratio or 1.0,
+            "step_decode_s": float(steps.min()),
+            "fused_decode_s": float(fused.min()),
+            "speedup": float(np.median(steps / fused)),
+            "tokens_identical": identical,
+        })
+    out = {
+        "backend": jax.default_backend(),
+        "model": cfg.name,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "gen_len": gen_len,
+        "max_len": max_len,
+        "repeats": repeats,
+        "statistic": "min_decode_wall_clock_s",
+        "speedup_dense": rows[0]["speedup"],
+        "rows": rows,
+    }
+    with open(BENCH_DECODE_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def main():
     print("\n# T23: FLOPs & weight bytes per decode token (llama-7b, full config)")
     cfg = get_config("llama-7b")
@@ -78,6 +151,14 @@ def main():
     print("\n# host CPU decode timing (proxy model; sanity, not a perf claim)")
     for r in run_host_timing():
         print(f"  ratio {r['ratio']:.1f}: {r['decode_ms_per_tok']:.2f} ms/tok")
+
+    print("\n# fused vs per-step decode loop (proxy model, single stream)")
+    bench = run_decode_loop_bench()
+    for r in bench["rows"]:
+        print(f"  ratio {r['ratio']:.1f}: step {r['step_decode_s']*1e3:7.1f} ms  "
+              f"fused {r['fused_decode_s']*1e3:7.1f} ms  "
+              f"{r['speedup']:.2f}x  identical={r['tokens_identical']}")
+    print(f"  -> {BENCH_DECODE_PATH}")
     return True
 
 

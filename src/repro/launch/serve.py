@@ -1,19 +1,29 @@
-"""Serving launcher: batched prefill + greedy decode, optionally with the
-Dobi-SVD-compressed model (the paper's deployment target).
+"""Serving launcher: batched prefill + greedy/sampled decode, optionally with
+the Dobi-SVD-compressed model (the paper's deployment target).
 
 Host-scale demo (examples/compress_and_serve.py drives this):
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --batch 4 --prompt-len 32 --gen-len 16 [--ratio 0.4]
+      --batch 4 --prompt-len 32 --gen-len 16 [--ratio 0.4] [--loop-mode step]
 
-The serving loop is continuous-batching-lite: all sequences decode in
-lockstep; finished sequences (EOS) are masked out and their slots report
-tokens/sec excluding pad work.
+Two decode loops over the same model code:
+
+  * fused (default) — the whole decode loop is ONE compiled `lax.scan` with
+    the KV cache and token buffer donated (models/generate.py); two device
+    dispatches per request (prefill + loop).
+  * step — the per-token reference loop (one jit(decode_step) dispatch per
+    token, nothing donated). Kept for parity testing and as the baseline in
+    benchmarks/t23_speed.py.
+
+Both loops share EOS semantics: finished sequences are frozen (keep emitting
+`eos_id`) so outputs are token-identical, and `decode_tok_per_s` counts only
+live-sequence tokens (pad work on finished sequences is excluded).
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -22,41 +32,81 @@ import jax.numpy as jnp
 from repro.configs import get_config, smoke_config, parse_overrides
 from repro.models import build
 from repro.models.compression import compress_model_params
+from repro.models.generate import live_token_counts, select_token, freeze_finished
+
+import numpy as np
+
+
+@functools.lru_cache(maxsize=16)
+def _jitted_step_fns(bundle):
+    """Per-bundle jitted prefill/decode for the per-step reference loop."""
+    return jax.jit(bundle.prefill), jax.jit(bundle.decode_step)
+
+
+def _generate_stepwise(bundle, params, prompt, gen_len, *, eos_id, cache_dtype,
+                       temperature, rng, max_len=None):
+    """Per-token reference loop: one device dispatch per generated token."""
+    b, s = prompt.shape
+    cfg = bundle.cfg
+    plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+    max_len = max_len if max_len is not None else plen + s + gen_len + 8
+    cache = bundle.init_cache(params, b, max_len=max_len, dtype=cache_dtype)
+    prefill, decode = _jitted_step_fns(bundle)
+    t0 = time.perf_counter()
+    logits, cache = jax.block_until_ready(prefill(params, {"tokens": prompt}, cache))
+    t_prefill = time.perf_counter() - t0
+
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    do_sample = temperature > 0.0
+    temp = jnp.asarray(temperature, jnp.float32)
+
+    def key_for(i):          # skip eager fold-in work in greedy mode
+        return jax.random.fold_in(rng, i) if do_sample else None
+
+    tok = select_token(logits, key_for(0), temp, do_sample)
+    alive = jnp.ones((b,), bool)
+    tok, alive = freeze_finished(tok, alive, eos_id)
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(gen_len - 1):
+        logits, cache = decode(params, tok, cache, plen + s + i)
+        tok = select_token(logits, key_for(i + 1), temp, do_sample)
+        tok, alive = freeze_finished(tok, alive, eos_id)
+        out.append(tok)
+    jax.block_until_ready(out[-1])
+    t_decode = time.perf_counter() - t0
+    toks = jnp.stack(out, axis=1)
+
+    counts = live_token_counts(toks, eos_id)
+    decoded = int(np.maximum(counts - 1, 0).sum())
+    return toks, {
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_per_s": decoded / max(t_decode, 1e-9),
+        "live_tokens": int(counts.sum()),
+        "loop_mode": "step",
+    }
 
 
 def generate(
     bundle, params, prompt: jnp.ndarray, gen_len: int,
     *, eos_id: int | None = None, cache_dtype=jnp.bfloat16,
+    loop_mode: str = "fused", temperature: float = 0.0, rng=None,
+    max_len: int | None = None,
 ):
-    """Greedy decode. prompt: (B, S). Returns (tokens (B, gen_len), stats)."""
-    b, s = prompt.shape
-    cfg = bundle.cfg
-    cache = bundle.init_cache(params, b, max_len=s + gen_len + 8, dtype=cache_dtype)
-    t0 = time.perf_counter()
-    logits, cache = jax.block_until_ready(
-        jax.jit(bundle.prefill)(params, {"tokens": prompt}, cache))
-    t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(bundle.decode_step)
-    plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
-    tok = jnp.argmax(logits, axis=-1)
-    out = [tok]
-    alive = jnp.ones((b,), bool)
-    t0 = time.perf_counter()
-    for i in range(gen_len - 1):
-        logits, cache = decode(params, tok, cache, plen + s + i)
-        tok = jnp.argmax(logits, axis=-1)
-        if eos_id is not None:
-            alive = alive & (tok != eos_id)
-        out.append(tok)
-    jax.block_until_ready(out[-1])
-    t_decode = time.perf_counter() - t0
-    toks = jnp.stack(out, axis=1)
-    return toks, {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_per_s": b * (gen_len - 1) / max(t_decode, 1e-9),
-    }
+    """Greedy/sampled decode. prompt: (B, S). Returns (tokens (B, gen_len),
+    stats). `loop_mode` = "fused" (single-dispatch scan engine) | "step".
+    `max_len` sizes the preallocated KV cache (a server sizes it for the
+    longest request it accepts, not for this one)."""
+    if loop_mode == "fused":
+        return bundle.generate(params, prompt, gen_len, eos_id=eos_id,
+                               cache_dtype=cache_dtype, temperature=temperature,
+                               rng=rng, max_len=max_len)
+    if loop_mode != "step":
+        raise ValueError(f"unknown loop_mode {loop_mode!r}")
+    return _generate_stepwise(bundle, params, prompt, gen_len, eos_id=eos_id,
+                              cache_dtype=cache_dtype, temperature=temperature,
+                              rng=rng, max_len=max_len)
 
 
 def main(argv=None):
@@ -67,6 +117,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--ratio", type=float, default=0.0, help="Dobi-SVD compression ratio")
+    ap.add_argument("--loop-mode", choices=("fused", "step"), default="fused")
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
@@ -87,9 +140,11 @@ def main(argv=None):
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)
     toks, stats = generate(bundle, params, prompt, args.gen_len,
-                           cache_dtype=jnp.dtype(cfg.dtype))
-    print(f"[serve] prefill {stats['prefill_s']*1e3:.1f} ms, "
-          f"decode {stats['decode_tok_per_s']:.1f} tok/s")
+                           eos_id=args.eos_id, cache_dtype=jnp.dtype(cfg.dtype),
+                           loop_mode=args.loop_mode, temperature=args.temperature)
+    print(f"[serve] {stats['loop_mode']}: prefill {stats['prefill_s']*1e3:.1f} ms, "
+          f"decode {stats['decode_tok_per_s']:.1f} tok/s "
+          f"({stats['live_tokens']} live tokens)")
     print("[serve] sample:", toks[0, :12].tolist())
     return stats
 

@@ -132,6 +132,7 @@ def build_step(
     kv_cache_dtype=None,          # e.g. jnp.float8_e4m3fn (hillclimb knob)
     ep: bool = False,             # expert-parallel sharding for MoE
     vocab_parallel_ce_opt: bool = False,
+    gen_len: int = 16,            # fused-generate loop length (kind="generate")
 ) -> StepBuild:
     bundle = build_model(cfg)
     param_spec_tree = bundle.param_specs()
@@ -173,6 +174,34 @@ def build_step(
             in_shardings=(pshard, bshard, cshard),
             mesh=mesh,
             donate=(2,),
+        )
+
+    if shape.kind == "generate":
+        # fused single-dispatch decode loop (models/generate.py): one lax.scan
+        # over `gen_len` token steps; the KV cache and the (B, gen_len) token
+        # buffer are donated so XLA updates them in place across the scan.
+        from repro.models.generate import make_decode_loop
+
+        b = shape.global_batch
+        cache = bundle.cache_specs(b, shape.seq_len,
+                                   dtype=kv_cache_dtype or jnp.bfloat16)
+        cspecs = shardlib.cache_spec(cache, mesh, cfg)
+        cshard = shardlib.make_sharding(mesh, cspecs)
+        logits0 = jax.ShapeDtypeStruct((b, cfg.vocab_size), jnp.dtype(cfg.dtype))
+        lgshard = shardlib.make_sharding(mesh, shardlib.batch_spec(logits0, mesh))
+        buf = jax.ShapeDtypeStruct((b, gen_len), jnp.int32)
+        bufshard = shardlib.make_sharding(mesh, shardlib.batch_spec(buf, mesh))
+        start = jax.ShapeDtypeStruct((), jnp.int32)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        temp = jax.ShapeDtypeStruct((), jnp.float32)
+        rep = NamedSharding(mesh, P())
+
+        return StepBuild(
+            fn=make_decode_loop(bundle.decode_step, eos_id=None),
+            args=(param_spec_tree, logits0, cache, buf, start, rng, temp),
+            in_shardings=(pshard, lgshard, cshard, bufshard, rep, rep, rep),
+            mesh=mesh,
+            donate=(2, 3),
         )
 
     # decode

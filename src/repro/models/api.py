@@ -37,6 +37,22 @@ class ModelBundle:
     decode_step: Callable               # (params, token, cache, length) -> (logits, cache)
     init_cache: Callable                # (params, batch, max_len, dtype) -> cache
 
+    # ---- fused generation -------------------------------------------------
+    def generate(self, params, batch, gen_len: int, *, eos_id: int | None = None,
+                 cache_dtype=jnp.bfloat16, max_len: int | None = None,
+                 temperature: float = 0.0, rng=None):
+        """Fused generation: prefill + the entire decode loop as one compiled
+        `lax.scan`, KV cache and token buffer donated (updated in place).
+
+        `batch` is a prefill batch dict or a bare (B, S) token array. Returns
+        (tokens (B, gen_len) int32, stats). Donation contract: do not reuse a
+        cache after handing it to the engine. See models/generate.py.
+        """
+        from repro.models.generate import get_engine
+        return get_engine(self, eos_id).generate(
+            params, batch, gen_len, cache_dtype=cache_dtype, max_len=max_len,
+            temperature=temperature, rng=rng)
+
     # ---- dry-run specs ----------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
         cfg = self.cfg
@@ -111,13 +127,18 @@ def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
         return encdec_lib.forward_encdec(params, batch["frames"], batch["tokens"], cfg), 0.0
 
     def prefill(params, batch, cache):
-        # enc-dec "prefill" = encode + teacher-forced decode of the prompt
-        enc_out, cache = encdec_lib.build_serving_cache(
+        # enc-dec "prefill" = encode once + a teacher-forced decoder pass over
+        # the prompt that fills the self-attention cache (previously the
+        # prompt K/V were never written, so decode attended over zeros). The
+        # rebuilt cache keeps the incoming cache's dtype so a donated
+        # decode-loop carry is dtype-stable (and the buffers can alias).
+        enc_out, new_cache = encdec_lib.build_serving_cache(
             params, batch["frames"], cfg, batch["tokens"].shape[0],
             max_len=cache_max_len_of(cache),
+            dtype=cache.self_kv.k.dtype,
         )
-        logits = encdec_lib.forward_encdec(params, batch["frames"], batch["tokens"], cfg)
-        return logits[:, -1], cache
+        return encdec_lib.prime_self_cache(params, batch["tokens"], cfg,
+                                           new_cache, enc_out)
 
     def decode(params, token, cache, length):
         return encdec_lib.decode_step_encdec(params, token, cfg, cache, length)
@@ -136,8 +157,9 @@ def _encdec_bundle(cfg: ModelConfig) -> ModelBundle:
 
 
 def cache_max_len_of(cache) -> int:
-    leaves = jax.tree.leaves(cache)
-    return max(l.shape[1] if l.ndim > 1 else 0 for l in leaves)
+    # self_kv leaves are layer-stacked (L, B, S_max, KVH, Dh); S_max is axis
+    # -3 (the old `shape[1]` read the batch dim of the stacked layout)
+    return cache.self_kv.k.shape[-3]
 
 
 def _init_encdec(cfg, rng):

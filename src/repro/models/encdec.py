@@ -20,7 +20,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.transformer import KVCache, init_kv_cache, scan_or_loop
+from repro.models.transformer import (
+    KVCache, init_kv_cache, read_stack_slice, scan_or_loop, write_stack_slot)
 from repro.parallel.sharding import constrain_batch, constrain_logits
 
 
@@ -62,7 +63,8 @@ def init_encdec_params(key, cfg: ModelConfig) -> dict:
     return params
 
 
-def _attn_nope(p, x_q, kv_src, cfg: ModelConfig, *, causal: bool) -> jnp.ndarray:
+def _attn_nope(p, x_q, kv_src, cfg: ModelConfig, *, causal: bool,
+               return_kv: bool = False):
     """Attention without RoPE (learned positions already added)."""
     b, sq, _ = x_q.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -70,7 +72,10 @@ def _attn_nope(p, x_q, kv_src, cfg: ModelConfig, *, causal: bool) -> jnp.ndarray
     k = L.apply_linear(p["wk"], kv_src).reshape(b, -1, kvh, hd)
     v = L.apply_linear(p["wv"], kv_src).reshape(b, -1, kvh, hd)
     out = L.full_attention(q, k, v, causal=causal)
-    return L.apply_linear(p["wo"], out.reshape(b, sq, -1))
+    out = L.apply_linear(p["wo"], out.reshape(b, sq, -1))
+    if return_kv:
+        return out, (k, v)
+    return out
 
 
 def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
@@ -89,14 +94,17 @@ def encode(params: dict, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     return L.rmsnorm(params["enc_norm"], x)
 
 
-def _dec_block(blk, x, enc_out, cfg: ModelConfig) -> jnp.ndarray:
-    a = _attn_nope(blk["attn"], L.rmsnorm(blk["ln1"], x), L.rmsnorm(blk["ln1"], x),
-                   cfg, causal=True)
+def _dec_block(blk, x, enc_out, cfg: ModelConfig, *, return_self_kv: bool = False):
+    y = L.rmsnorm(blk["ln1"], x)
+    a, self_kv = _attn_nope(blk["attn"], y, y, cfg, causal=True, return_kv=True)
     x = x + a
     c = _attn_nope(blk["xattn"], L.rmsnorm(blk["lnx"], x), enc_out, cfg, causal=False)
     x = x + c
     m = L.apply_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], x), cfg.act)
-    return x + m
+    x = x + m
+    if return_self_kv:
+        return x, self_kv
+    return x
 
 
 def forward_encdec(
@@ -157,6 +165,36 @@ def build_serving_cache(
     return enc_out, EncDecCache(self_kv=self_kv, cross_k=ck, cross_v=cv)
 
 
+def prime_self_cache(
+    params: dict, tokens: jnp.ndarray, cfg: ModelConfig, cache: EncDecCache,
+    enc_out: jnp.ndarray,
+) -> tuple[jnp.ndarray, EncDecCache]:
+    """Teacher-forced decoder pass over the prompt that writes each layer's
+    self-attention K/V into cache positions [0, S) and returns the prompt's
+    last-position logits.
+
+    Without this, decode steps after a multi-token prompt attend over the
+    zero-initialised cache slots. Reuses `_dec_block` (the one copy of the
+    decoder math) so prefill/decode parity can't drift.
+    """
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype)) * math.sqrt(cfg.d_model)
+    x = constrain_batch(x + params["dec_pos"][None, :s])
+
+    def body(h, xs):
+        blk, kv = xs
+        h, (kk, vv) = _dec_block(blk, h, enc_out, cfg, return_self_kv=True)
+        nk = jax.lax.dynamic_update_slice_in_dim(kv.k, kk.astype(kv.k.dtype), 0, axis=1)
+        nv = jax.lax.dynamic_update_slice_in_dim(kv.v, vv.astype(kv.v.dtype), 0, axis=1)
+        return h, KVCache(nk, nv)
+
+    x, new_self = scan_or_loop(
+        body, x, (params["dec_blocks"], cache.self_kv), cfg.scan_layers)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:])
+    logits = L.apply_linear(params["lm_head"], x)
+    return logits[:, 0], cache._replace(self_kv=new_self)
+
+
 def decode_step_encdec(
     params: dict, token: jnp.ndarray, cfg: ModelConfig, cache: EncDecCache, length
 ) -> tuple[jnp.ndarray, EncDecCache]:
@@ -166,16 +204,21 @@ def decode_step_encdec(
     pos = jnp.asarray(length, jnp.int32)
     x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)[None, 0][:, None]
 
-    def body(h, xs):
-        blk, kv, ck, cv = xs
+    # self_kv is a layer-stacked scan CARRY updated in place (one token slot
+    # per layer) — same contract as transformer.decode_step, so the fused
+    # decode loop's donated cache never gets copied. Cross K/V are read-only xs.
+    def body(carry, xs):
+        h, kv = carry
+        blk, ck, cv, i = xs
         # self attention (cached, causal)
         y = L.rmsnorm(blk["ln1"], h)
         q = L.apply_linear(blk["attn"]["wq"], y).reshape(b, 1, h_heads, hd)
         kk = L.apply_linear(blk["attn"]["wk"], y).reshape(b, 1, kvh, hd)
         vv = L.apply_linear(blk["attn"]["wv"], y).reshape(b, 1, kvh, hd)
-        nk = jax.lax.dynamic_update_slice_in_dim(kv.k, kk.astype(kv.k.dtype), pos, axis=1)
-        nv = jax.lax.dynamic_update_slice_in_dim(kv.v, vv.astype(kv.v.dtype), pos, axis=1)
-        att = L.decode_attention(q, nk, nv, pos + 1)
+        nk = write_stack_slot(kv.k, kk, (i,), pos)
+        nv = write_stack_slot(kv.v, vv, (i,), pos)
+        att = L.decode_attention(q, read_stack_slice(nk, (i,)),
+                                 read_stack_slice(nv, (i,)), pos + 1)
         h = h + L.apply_linear(blk["attn"]["wo"], att.reshape(b, 1, -1))
         # cross attention (static cache)
         y = L.rmsnorm(blk["lnx"], h)
@@ -184,10 +227,12 @@ def decode_step_encdec(
         h = h + L.apply_linear(blk["xattn"]["wo"], attx.reshape(b, 1, -1))
         # mlp
         h = h + L.apply_mlp(blk["mlp"], L.rmsnorm(blk["ln2"], h), cfg.act)
-        return h, KVCache(nk, nv)
+        return (h, KVCache(nk, nv)), None
 
-    x, new_self = scan_or_loop(
-        body, x, (params["dec_blocks"], cache.self_kv, cache.cross_k, cache.cross_v),
+    n_layers = jax.tree.leaves(params["dec_blocks"])[0].shape[0]
+    (x, new_self), _ = scan_or_loop(
+        body, (x, cache.self_kv),
+        (params["dec_blocks"], cache.cross_k, cache.cross_v, jnp.arange(n_layers)),
         cfg.scan_layers,
     )
     x = L.rmsnorm(params["final_norm"], x)

@@ -1,0 +1,164 @@
+"""Fused generation engine: the whole decode loop as ONE compiled program.
+
+The serving hot path used to dispatch one `jit(decode_step)` call per
+generated token from Python, and — with nothing donated — XLA copied the full
+(B, S_max, KVH, Dh) KV cache on every step. Here prefill and the entire
+greedy/sampled decode loop run as two dispatches total:
+
+  1. `prefill(params, batch, cache)`      — cache argument donated;
+  2. `decode_loop(params, logits0, cache, buf, start, rng, temperature)`
+     — one `lax.scan` over token steps, with the KV cache and the (B, gen_len)
+       token buffer donated so XLA updates them in place.
+
+Donation contract: callers must NOT reuse a cache or token buffer after
+passing it to the engine — the backing buffers are aliased into the outputs.
+
+EOS handling inside the scan keeps finished sequences frozen (they keep
+emitting `eos_id`), so fused output is token-identical to the per-step
+reference loop in `launch/serve.py` (`--loop-mode=step`).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def select_token(logits, key, temperature, do_sample: bool) -> jnp.ndarray:
+    """Greedy argmax, or temperature sampling when `do_sample` (static).
+    `key` may be None in greedy mode (eager callers skip the fold-in)."""
+    if do_sample:
+        scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def freeze_finished(tok, alive, eos_id):
+    """Frozen-sequence EOS semantics, shared by the fused and per-step loops:
+    a finished sequence keeps emitting `eos_id`; `alive` latches to False the
+    step a sequence first emits EOS."""
+    if eos_id is None:
+        return tok, alive
+    tok = jnp.where(alive, tok, jnp.full_like(tok, eos_id))
+    return tok, alive & (tok != eos_id)
+
+
+def make_decode_loop(decode_step, eos_id: int | None = None):
+    """Build the fused decode-loop fn around a bundle's `decode_step`.
+
+    Returned signature (jit with donate_argnums=(2, 3)):
+        loop(params, logits0, cache, buf, start_len, rng, temperature,
+             *, do_sample=False) -> (tokens (B, gen_len), alive (B,), cache)
+
+    The final cache is returned so the donated input cache has an output to
+    alias with (XLA only reuses a donated buffer in place when it can be
+    aliased to an output of the same shape/dtype) — and so a future
+    continuous-batching layer can keep decoding from it.
+
+    `logits0` are the last-position prefill logits; `buf` is the preallocated
+    (B, gen_len) int32 output buffer; `start_len` is the number of positions
+    already in the cache (prefix + prompt).
+    """
+
+    def loop(params, logits0, cache, buf, start_len, rng, temperature,
+             *, do_sample: bool = False):
+        b, gen_len = buf.shape
+        tok0 = select_token(logits0, jax.random.fold_in(rng, 0), temperature, do_sample)
+        alive = jnp.ones((b,), bool)
+        tok0, alive = freeze_finished(tok0, alive, eos_id)
+        buf = jax.lax.dynamic_update_slice(buf, tok0[:, None], (0, 0))
+
+        def body(carry, i):
+            tok, cache, alive, buf = carry
+            logits, cache = decode_step(params, tok, cache, start_len + i)
+            nxt = select_token(logits, jax.random.fold_in(rng, i + 1),
+                               temperature, do_sample)
+            nxt, alive = freeze_finished(nxt, alive, eos_id)
+            buf = jax.lax.dynamic_update_slice(buf, nxt[:, None], (0, i + 1))
+            return (nxt, cache, alive, buf), None
+
+        (_, cache, alive, buf), _ = jax.lax.scan(
+            body, (tok0, cache, alive, buf), jnp.arange(gen_len - 1))
+        return buf, alive, cache
+
+    return loop
+
+
+def live_token_counts(toks, eos_id: int | None) -> np.ndarray:
+    """Per-sequence generated-token counts up to and including the first EOS
+    (frozen tail positions are pad work, not generated tokens)."""
+    t = np.asarray(toks)
+    if eos_id is None:
+        return np.full(t.shape[0], t.shape[1], np.int64)
+    hit = t == eos_id
+    return np.where(hit.any(axis=1), hit.argmax(axis=1) + 1, t.shape[1])
+
+
+class GenerationEngine:
+    """Compiled prefill + fused decode loop for one ModelBundle.
+
+    Construct once (or via `get_engine`) and reuse: the jitted callables carry
+    the compilation cache. `eos_id` is baked into the compiled loop.
+    """
+
+    def __init__(self, bundle, *, eos_id: int | None = None):
+        self.bundle = bundle
+        self.eos_id = eos_id
+        self._prefill = jax.jit(bundle.prefill, donate_argnums=(2,))
+        self._loop = jax.jit(
+            make_decode_loop(bundle.decode_step, eos_id),
+            donate_argnums=(2, 3), static_argnames=("do_sample",))
+
+    def start_length(self, prompt_len: int) -> int:
+        cfg = self.bundle.cfg
+        plen = cfg.num_prefix_tokens if cfg.family == "vlm" else 0
+        return plen + prompt_len
+
+    def generate(self, params, batch, gen_len: int, *,
+                 cache_dtype=jnp.bfloat16, max_len: int | None = None,
+                 temperature: float = 0.0, rng=None):
+        """Run prefill + the whole decode loop. `batch` is the prefill batch
+        dict (or a bare (B, S) token array). Returns (tokens (B, gen_len),
+        stats). Two device dispatches total, caches donated throughout."""
+        if not isinstance(batch, dict):
+            batch = {"tokens": batch}
+        b, s = batch["tokens"].shape
+        start = self.start_length(s)
+        max_len = max_len if max_len is not None else start + gen_len + 8
+        cache = self.bundle.init_cache(params, b, max_len=max_len, dtype=cache_dtype)
+
+        t0 = time.perf_counter()
+        logits, cache = jax.block_until_ready(self._prefill(params, batch, cache))
+        t_prefill = time.perf_counter() - t0
+
+        buf = jnp.zeros((b, gen_len), jnp.int32)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        do_sample = temperature > 0.0
+        t0 = time.perf_counter()
+        toks, alive, _final_cache = jax.block_until_ready(self._loop(
+            params, logits, cache, buf, jnp.asarray(start, jnp.int32), rng,
+            jnp.asarray(temperature, jnp.float32), do_sample=do_sample))
+        t_decode = time.perf_counter() - t0
+
+        counts = live_token_counts(toks, self.eos_id)
+        # the first token comes out of the prefill dispatch; decode-phase
+        # throughput counts only live (non-frozen) tokens after it
+        decoded = int(np.maximum(counts - 1, 0).sum())
+        stats = {
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "decode_tok_per_s": decoded / max(t_decode, 1e-9),
+            "live_tokens": int(counts.sum()),
+            "loop_mode": "fused",
+        }
+        return toks, stats
+
+
+@functools.lru_cache(maxsize=32)
+def get_engine(bundle, eos_id: int | None = None) -> GenerationEngine:
+    """Engine cache so repeated `bundle.generate(...)` calls reuse compiles."""
+    return GenerationEngine(bundle, eos_id=eos_id)

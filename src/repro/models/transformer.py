@@ -145,25 +145,56 @@ def prefill_attention(
     return L.apply_linear(p["wo"], out.reshape(b, s, -1)), KVCache(new_k, new_v)
 
 
+def read_stack_slice(stacked: jnp.ndarray, idx: tuple) -> jnp.ndarray:
+    """This layer's (B, S, KVH, Dh) slice of a (*stack, B, S, ...) cache leaf."""
+    depth = len(idx)
+    if depth == 0:
+        return stacked
+    start = tuple(idx) + (0,) * (stacked.ndim - depth)
+    sizes = (1,) * depth + stacked.shape[depth:]
+    return jax.lax.dynamic_slice(stacked, start, sizes).reshape(stacked.shape[depth:])
+
+
+def write_stack_slot(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
+                     slot) -> jnp.ndarray:
+    """Write a (B, 1, KVH, Dh) token update at `slot` of layer `idx` of a
+    stacked cache leaf — a one-slot dynamic_update_slice, NOT a full-layer
+    copy, so XLA updates a donated scan carry in place."""
+    depth = len(idx)
+    upd = update.astype(stacked.dtype).reshape((1,) * depth + update.shape)
+    start = tuple(idx) + (0, jnp.asarray(slot, jnp.int32)) + (0,) * (update.ndim - 2)
+    return jax.lax.dynamic_update_slice(stacked, upd, start)
+
+
 def decode_attention_layer(
-    p, x, cfg: ModelConfig, cache: KVCache, length, *, window: int
+    p, x, cfg: ModelConfig, cache: KVCache, length, *, window: int,
+    idx: tuple = (),
 ) -> tuple[jnp.ndarray, KVCache]:
-    """Single-token decode. x: (B, 1, D); `length` = tokens already in cache."""
+    """Single-token decode. x: (B, 1, D); `length` = tokens already in cache.
+
+    `cache` leaves may be layer-stacked — (*stack, B, S_cache, KVH, Dh) with
+    `idx` (len = stack depth) addressing this layer. The new token's K/V are
+    written in place into the stacked buffer (one slot per leaf), and the
+    whole stack is returned: inside the fused decode loop the stack is a
+    donated `lax.scan` carry, so no per-step cache copy exists anywhere.
+    """
     b = x.shape[0]
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     positions = jnp.full((1,), length, jnp.int32)
     q, k, v = _project_qkv(p, x, cfg, positions)
 
-    s_cache = cache.k.shape[1]
+    s_cache = cache.k.shape[len(idx) + 1]
     slot = jnp.asarray(length, jnp.int32) % s_cache
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    new_k = write_stack_slot(cache.k, k, idx, slot)
+    new_v = write_stack_slot(cache.v, v, idx, slot)
+    layer_k = read_stack_slice(new_k, idx)
+    layer_v = read_stack_slice(new_v, idx)
 
     if window > 0:
         # ring cache: every resident slot is within the window by construction
-        out = L.decode_attention(q, new_k, new_v, ring_valid_count(length, s_cache))
+        out = L.decode_attention(q, layer_k, layer_v, ring_valid_count(length, s_cache))
     else:
-        out = L.decode_attention(q, new_k, new_v, length + 1)
+        out = L.decode_attention(q, layer_k, layer_v, length + 1)
     return L.apply_linear(p["wo"], out.reshape(b, 1, -1)), KVCache(new_k, new_v)
 
 
@@ -252,15 +283,36 @@ def prefill_block(p, x, cfg, kind, cache, *, window: int):
     return x + out, new_cache
 
 
-def decode_block(p, x, cfg, kind, cache, length, *, window: int):  # noqa: C901
+def tree_read_slice(cache, idx: tuple):
+    """Per-leaf `read_stack_slice` over a stacked cache pytree."""
+    return jax.tree.map(lambda a: read_stack_slice(a, idx), cache)
+
+
+def tree_write_slice(cache, new, idx: tuple):
+    """Write a whole per-layer slice back into the stacked pytree (used for
+    mamba state, which is rewritten wholesale every step anyway)."""
+    depth = len(idx)
+
+    def wr(full, n):
+        upd = n.astype(full.dtype).reshape((1,) * depth + n.shape)
+        return jax.lax.dynamic_update_slice(full, upd, tuple(idx) + (0,) * n.ndim)
+
+    return jax.tree.map(wr, cache, new)
+
+
+def decode_block(p, x, cfg, kind, cache, length, *, window: int,
+                 idx: tuple = ()):  # noqa: C901
+    """Decode one block against a layer-stacked cache (see
+    decode_attention_layer for the `idx` in-place contract)."""
     if kind == "mamba":
-        h, new_cache = ssm_lib.apply_mamba_decode(
-            p["mamba"], _norm(cfg, p["ln1"], x), cache,
+        h, new_slice = ssm_lib.apply_mamba_decode(
+            p["mamba"], _norm(cfg, p["ln1"], x), tree_read_slice(cache, idx),
             d_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
         )
-        return x + h, new_cache
+        return x + h, tree_write_slice(cache, new_slice, idx)
     h, new_cache = decode_attention_layer(
-        p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, length, window=window
+        p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, length, window=window,
+        idx=idx,
     )
     x = x + h
     y = _norm(cfg, p["ln2"], x)
@@ -599,73 +651,109 @@ def decode_step(
     cache: dict,
     length,                    # scalar int — tokens already in cache
 ) -> tuple[jnp.ndarray, dict]:
-    """One decode step: returns (logits (B, V), new_cache)."""
+    """One decode step: returns (logits (B, V), new_cache).
+
+    Scan contract (models/generate.py runs this as a `lax.scan` body): no
+    Python control flow on `length`, and every cache leaf comes back with the
+    shape/dtype it went in with, so the cache can be a donated scan carry.
+    """
+    length = jnp.asarray(length, jnp.int32)
     x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
     x = constrain_batch(x * math.sqrt(cfg.d_model))
     plan = plan_structure(cfg)
     w = cfg.sliding_window
     new_cache: dict = {}
 
+    # The layer-stacked caches are scan CARRIES updated in place (one token
+    # slot per layer), not scan outputs: emitting the cache as stacked `ys`
+    # would allocate + copy the whole cache every decode step, which is
+    # exactly what the fused loop's donation exists to avoid.
     if plan["template"] == "uniform":
         kind = plan["kind"]
 
-        def body(h, xs):
-            blk, c = xs
-            h2, nc = decode_block(blk, h, cfg, kind, c, length, window=w)
-            return h2, nc
+        def body(carry, xs):
+            h, kv = carry
+            blk, i = xs
+            h2, kv = decode_block(blk, h, cfg, kind, kv, length, window=w, idx=(i,))
+            return (h2, kv), None
 
-        x, new_cache["blocks"] = scan_or_loop(body, x, (params["blocks"], cache["blocks"]), cfg.scan_layers)
+        (x, new_cache["blocks"]), _ = scan_or_loop(
+            body, (x, cache["blocks"]),
+            (params["blocks"], jnp.arange(plan["layers"])), cfg.scan_layers)
 
     elif plan["template"] == "gemma":
-        def group(h, xs):
-            (local_stack, global_blk), (local_c, global_c) = xs
+        lpg = plan["local_per_group"]
 
-            def local_body(hh, ys):
-                blk, c = ys
-                h2, nc = decode_block(blk, hh, cfg, "dense", c, length, window=w)
-                return h2, nc
+        def group(carry, xs):
+            h, local_kv, global_kv = carry
+            (local_stack, global_blk), g = xs
 
-            h, new_local = scan_or_loop(local_body, h, (local_stack, local_c), cfg.scan_layers)
-            h, new_global = decode_block(global_blk, h, cfg, "dense", global_c, length, window=0)
-            return h, (new_local, new_global)
+            def local_body(c2, ys):
+                hh, lkv = c2
+                blk, j = ys
+                h2, lkv = decode_block(blk, hh, cfg, "dense", lkv, length,
+                                       window=w, idx=(g, j))
+                return (h2, lkv), None
 
-        x, (nl, ng) = scan_or_loop(
-            group, x,
+            (h, local_kv), _ = scan_or_loop(
+                local_body, (h, local_kv), (local_stack, jnp.arange(lpg)),
+                cfg.scan_layers)
+            h, global_kv = decode_block(global_blk, h, cfg, "dense", global_kv,
+                                        length, window=0, idx=(g,))
+            return (h, local_kv, global_kv), None
+
+        (x, nl, ng), _ = scan_or_loop(
+            group, (x, cache["local"], cache["global"]),
             ((params["local_blocks"], params["global_blocks"]),
-             (cache["local"], cache["global"])), cfg.scan_layers,
+             jnp.arange(plan["groups"])), cfg.scan_layers,
         )
         new_cache["local"], new_cache["global"] = nl, ng
         if "rem_blocks" in params:
-            def rem_body(h, xs):
-                blk, c = xs
-                h2, nc = decode_block(blk, h, cfg, "dense", c, length, window=w)
-                return h2, nc
-            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_blocks"], cache["rem"]), cfg.scan_layers)
+            def rem_body(carry, xs):
+                h, kv = carry
+                blk, r = xs
+                h2, kv = decode_block(blk, h, cfg, "dense", kv, length,
+                                      window=w, idx=(r,))
+                return (h2, kv), None
+            (x, new_cache["rem"]), _ = scan_or_loop(
+                rem_body, (x, cache["rem"]),
+                (params["rem_blocks"], jnp.arange(plan["rem"])), cfg.scan_layers)
 
     else:  # zamba
-        def group(h, xs):
-            mamba_stack, (mamba_c, attn_c) = xs
+        pg = plan["per_group"]
 
-            def m_body(hh, ys):
-                blk, c = ys
-                h2, nc = decode_block(blk, hh, cfg, "mamba", c, length, window=0)
-                return h2, nc
+        def group(carry, xs):
+            h, m_kv, a_kv = carry
+            mamba_stack, g = xs
 
-            h, new_m = scan_or_loop(m_body, h, (mamba_stack, mamba_c), cfg.scan_layers)
-            h, new_a = decode_block(params["shared_attn"], h, cfg, "dense", attn_c, length,
-                                    window=cfg.sliding_window)
-            return h, (new_m, new_a)
+            def m_body(c2, ys):
+                hh, mkv = c2
+                blk, j = ys
+                h2, mkv = decode_block(blk, hh, cfg, "mamba", mkv, length,
+                                       window=0, idx=(g, j))
+                return (h2, mkv), None
 
-        x, (nm, na) = scan_or_loop(
-            group, x, (params["mamba_blocks"], (cache["mamba"], cache["attn"])), cfg.scan_layers
+            (h, m_kv), _ = scan_or_loop(
+                m_body, (h, m_kv), (mamba_stack, jnp.arange(pg)), cfg.scan_layers)
+            h, a_kv = decode_block(params["shared_attn"], h, cfg, "dense", a_kv,
+                                   length, window=cfg.sliding_window, idx=(g,))
+            return (h, m_kv, a_kv), None
+
+        (x, nm, na), _ = scan_or_loop(
+            group, (x, cache["mamba"], cache["attn"]),
+            (params["mamba_blocks"], jnp.arange(plan["groups"])), cfg.scan_layers
         )
         new_cache["mamba"], new_cache["attn"] = nm, na
         if "rem_mamba" in params:
-            def rem_body(h, xs):
-                blk, c = xs
-                h2, nc = decode_block(blk, h, cfg, "mamba", c, length, window=0)
-                return h2, nc
-            x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_mamba"], cache["rem"]), cfg.scan_layers)
+            def rem_body(carry, xs):
+                h, kv = carry
+                blk, r = xs
+                h2, kv = decode_block(blk, h, cfg, "mamba", kv, length,
+                                      window=0, idx=(r,))
+                return (h2, kv), None
+            (x, new_cache["rem"]), _ = scan_or_loop(
+                rem_body, (x, cache["rem"]),
+                (params["rem_mamba"], jnp.arange(plan["rem"])), cfg.scan_layers)
 
     x = L.rmsnorm(params["final_norm"], x)
     head = params.get("lm_head")
