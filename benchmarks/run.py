@@ -1,9 +1,12 @@
-"""Benchmark runner — one section per paper table/figure.
+"""Benchmark runner — one section per paper table/figure, plus the serving
+benches (t23 fused-vs-step decode, t24 continuous-vs-static batching).
 
 Prints a human-readable section per table plus the required
 ``name,us_per_call,derived`` CSV lines at the end.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run [--smoke]
+
+``--smoke`` shrinks the t24 serving trace for CI-sized runs.
 """
 
 from __future__ import annotations
@@ -29,14 +32,16 @@ def main(argv=None):
     argv = argv if argv is not None else sys.argv[1:]
 
     from benchmarks import t1_truncation, t2_methods, t8_remap, t15_t16_t17, t23_speed
-    from benchmarks import kernels_bench
+    from benchmarks import kernels_bench, t24_continuous
 
+    smoke = "--smoke" in argv
     sections = [
         ("t1_truncation", t1_truncation.main),
         ("t2_methods", t2_methods.main),
         ("t8_remap", t8_remap.main),
         ("t15_t16_t17_fig3", t15_t16_t17.main),
         ("t23_speed", t23_speed.main),
+        ("t24_continuous", lambda: t24_continuous.main(smoke=smoke)),
         ("kernels", kernels_bench.main),
     ]
 

@@ -1,0 +1,205 @@
+"""Continuous batching vs static fused batches: request-level throughput.
+
+The paper's serving payoff (T23/Fig 4) is per-token decode speed; this bench
+measures what that buys at the REQUEST level under multi-user traffic. One
+Poisson trace with heterogeneous generation lengths is served two ways on
+identical hardware, dense and Dobi-compressed at 0.4:
+
+  * static   — requests grouped into fixed batches of `num_slots` in arrival
+               order; each batch runs the one-shot fused loop to the LONGEST
+               cap in the batch (head-of-line blocking: short requests idle
+               in finished rows, queued requests wait for the whole batch);
+  * continuous — the same trace through serving/engine.py: finished slots
+               retire at chunk boundaries and queued requests take their
+               place mid-decode.
+
+Both sides run on the same virtual compute clock (traffic.VirtualClock for
+the engine; measured fused wall-clock stitched onto the same arrival timeline
+for static), with a full warm-up pass first so compile time is excluded.
+Per-request outputs from BOTH schedulers are asserted token-identical to
+running each request alone. Writes BENCH_serving.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import build
+from repro.models.compression import compress_model_params
+from repro.serving import ContinuousEngine, VirtualClock, poisson_trace
+from repro.serving.engine import summarize
+
+BENCH_SERVING_PATH = os.path.join(os.path.dirname(__file__), "BENCH_serving.json")
+
+
+def run_static(bundle, params, trace, *, num_slots, max_len, cache_dtype):
+    """Static scheduler: fused batches of `num_slots` in arrival order.
+
+    A batch starts when the previous batch finished AND all its members have
+    arrived, and decodes to the longest member's cap; each member's finish
+    time is the batch's. Timing is measured fused wall-clock placed on the
+    trace's arrival timeline, so it is directly comparable with the
+    continuous engine's virtual clock. Returns (outputs {rid: tokens},
+    stats rows).
+    """
+    outputs, rows = {}, []
+    t = 0.0
+    for i in range(0, len(trace), num_slots):
+        batch = trace[i:i + num_slots]
+        gen = max(r.max_new_tokens for r in batch)
+        # one prompt length per trace: padding a static batch would shift
+        # RoPE positions and break the vs-solo parity this bench asserts
+        # (the continuous engine has no such constraint — each slot prefills
+        # at its own length)
+        assert len({len(r.prompt) for r in batch}) == 1, \
+            "static baseline needs a uniform prompt length"
+        prompts = np.stack([r.prompt for r in batch])
+        t = max(t, max(r.arrival_time for r in batch))
+        t0 = time.perf_counter()
+        toks, _ = bundle.generate(params, jnp.asarray(prompts), gen,
+                                  cache_dtype=cache_dtype, max_len=max_len)
+        toks = np.asarray(jax.block_until_ready(toks))
+        t += time.perf_counter() - t0
+        for row, r in zip(toks, batch):
+            outputs[r.rid] = row[:r.max_new_tokens]
+            rows.append({"rid": r.rid, "arrival": r.arrival_time, "finish": t})
+    return outputs, rows
+
+
+def static_metrics(rows):
+    lat = np.array([r["finish"] - r["arrival"] for r in rows])
+    span = max(r["finish"] for r in rows) - min(r["arrival"] for r in rows)
+    return {
+        "requests_per_s": len(rows) / max(span, 1e-9),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+    }
+
+
+def solo_outputs(bundle, params, trace, *, max_len, cache_dtype):
+    """Each request alone through the fused loop — the parity oracle."""
+    return {
+        r.rid: np.asarray(bundle.generate(
+            params, jnp.asarray(r.prompt)[None], r.max_new_tokens,
+            cache_dtype=cache_dtype, max_len=max_len)[0])[0]
+        for r in trace
+    }
+
+
+def bench_one(bundle, params, trace, *, num_slots, max_len, chunk, cache_dtype,
+              passes=3):
+    """Warm-up + timed passes of both schedulers on one param set.
+
+    Pass 1 drives every compile both sides need (prefill per prompt length,
+    chunk loop, slot insert, fused loop per batch shape); each scheduler then
+    reports its best timed pass (the min-wall-clock statistic, as in t23 —
+    robust to background-load spikes on a shared box).
+    """
+    engine = ContinuousEngine(bundle, params, num_slots=num_slots,
+                              max_len=max_len, chunk=chunk,
+                              cache_dtype=cache_dtype, clock=VirtualClock())
+    engine.run(list(trace))        # warm-up
+    run_static(bundle, params, trace, num_slots=num_slots, max_len=max_len,
+               cache_dtype=cache_dtype)
+
+    cont, cont_results, static = None, None, None
+    for _ in range(passes):
+        engine.reset(VirtualClock())
+        results = engine.run(list(trace))
+        agg = summarize(results)
+        if cont is None or agg["requests_per_s"] > cont["requests_per_s"]:
+            cont, cont_results = agg, results
+        static_out, static_rows = run_static(
+            bundle, params, trace, num_slots=num_slots, max_len=max_len,
+            cache_dtype=cache_dtype)
+        m = static_metrics(static_rows)
+        if static is None or m["requests_per_s"] > static["requests_per_s"]:
+            static = m
+
+    solo = solo_outputs(bundle, params, trace, max_len=max_len,
+                        cache_dtype=cache_dtype)
+    identical = all(
+        np.array_equal(solo[r.rid], cont_results[r.rid][0])
+        and np.array_equal(solo[r.rid], static_out[r.rid])
+        for r in trace)
+    return {
+        "static": static,
+        "continuous": {k: cont[k] for k in
+                       ("requests_per_s", "latency_p50_s", "latency_p95_s",
+                        "queue_wait_mean_s", "ttft_mean_s",
+                        "decode_tok_per_s_mean")},
+        "speedup_requests_per_s": cont["requests_per_s"] / max(
+            static["requests_per_s"], 1e-9),
+        "tokens_identical_vs_solo": bool(identical),
+    }
+
+
+def run_bench(*, n_requests=24, num_slots=4, chunk=8, arrival_rate=60.0,
+              prompt_lens=(16,), gen_lens=(4, 8, 16, 96), seed=0):
+    """Default trace: heavy-tailed generation lengths — the standard serving
+    regime, and the one continuous batching exists for (a static batch runs
+    every member to the rare 96-token straggler's cap; the engine retires the
+    short ones and refills their slots)."""
+    cfg, params, _ = common.train_proxy_model()
+    serve_cfg = cfg.with_overrides(scan_layers=False)
+    bundle = build(serve_cfg)
+    calib = common.calib_batches(cfg, n=2)
+    trace = poisson_trace(n_requests, arrival_rate, vocab_size=cfg.vocab_size,
+                          prompt_lens=prompt_lens, gen_lens=gen_lens, seed=seed)
+    max_len = max(prompt_lens) + max(gen_lens) + chunk + 8
+
+    rows = []
+    for ratio in (None, 0.4):
+        p = params
+        if ratio is not None:
+            p, _ = compress_model_params(params, cfg, calib, ratio,
+                                         method="dobi_noremap", quantize=False)
+        row = bench_one(bundle, p, trace, num_slots=num_slots, max_len=max_len,
+                        chunk=chunk, cache_dtype=jnp.float32)
+        row["ratio"] = ratio or 1.0
+        rows.append(row)
+
+    out = {
+        "backend": jax.default_backend(),
+        "model": cfg.name,
+        "num_slots": num_slots,
+        "chunk": chunk,
+        "n_requests": n_requests,
+        "arrival_rate": arrival_rate,
+        "prompt_lens": list(prompt_lens),
+        "gen_lens": list(gen_lens),
+        "max_len": max_len,
+        "clock": "virtual (measured device compute; compiles excluded)",
+        "rows": rows,
+    }
+    with open(BENCH_SERVING_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main(smoke: bool = False):
+    print("\n# T24: continuous batching vs static fused batches (proxy model)")
+    kw = dict(n_requests=6, num_slots=2, chunk=4, gen_lens=(4, 8, 16),
+              prompt_lens=(8,)) if smoke else {}
+    bench = run_bench(**kw)
+    for r in bench["rows"]:
+        s, c = r["static"], r["continuous"]
+        print(f"  ratio {r['ratio']:.1f}: "
+              f"static {s['requests_per_s']:6.2f} req/s (p95 {s['latency_p95_s']:.2f}s)  "
+              f"continuous {c['requests_per_s']:6.2f} req/s (p95 {c['latency_p95_s']:.2f}s)  "
+              f"{r['speedup_requests_per_s']:.2f}x  "
+              f"identical={r['tokens_identical_vs_solo']}")
+    print(f"  -> {BENCH_SERVING_PATH}")
+    return True
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -6,18 +6,28 @@ Host-scale demo (examples/compress_and_serve.py drives this):
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
       --batch 4 --prompt-len 32 --gen-len 16 [--ratio 0.4] [--loop-mode step]
 
-Two decode loops over the same model code:
+Three decode loops over the same model code (docs/serving.md compares them):
 
   * fused (default) — the whole decode loop is ONE compiled `lax.scan` with
     the KV cache and token buffer donated (models/generate.py); two device
-    dispatches per request (prefill + loop).
+    dispatches per request batch (prefill + loop).
   * step — the per-token reference loop (one jit(decode_step) dispatch per
     token, nothing donated). Kept for parity testing and as the baseline in
     benchmarks/t23_speed.py.
+  * continuous (`--traffic N`) — the in-flight batching engine
+    (serving/engine.py): N requests replayed from a Poisson arrival trace
+    through a fixed pool of KV-cache slots, chunked compiled decode,
+    admission/retirement at chunk boundaries. Stats here are PER-REQUEST
+    (queue wait, TTFT, decode tok/s — the printed tok/s is the mean of
+    per-request throughputs, directly comparable with the single-request
+    numbers in BENCH_decode.json), never per-batch.
 
-Both loops share EOS semantics: finished sequences are frozen (keep emitting
-`eos_id`) so outputs are token-identical, and `decode_tok_per_s` counts only
-live-sequence tokens (pad work on finished sequences is excluded).
+The fused/step loops share EOS semantics: finished sequences are frozen (keep
+emitting `eos_id`) so outputs are token-identical, and `decode_tok_per_s`
+counts only live-sequence tokens (pad work on finished sequences is
+excluded). The continuous engine inherits the same freeze semantics per slot,
+so each request's tokens are identical to running it alone
+(tests/test_continuous_batching.py).
 """
 
 from __future__ import annotations
@@ -109,6 +119,47 @@ def generate(
                               rng=rng, max_len=max_len)
 
 
+def run_traffic(bundle, params, args, cfg):
+    """Replay a Poisson arrival trace through the continuous-batching engine.
+
+    Per-request stats throughout: the printed decode tok/s is the MEAN OF
+    PER-REQUEST throughputs (each request's tokens over its own first-token →
+    retirement span), not tokens-over-makespan for the whole batch — so it
+    stays comparable with the single-request decode_tok_per_s figures in
+    BENCH_decode.json regardless of how many requests shared the pool.
+    """
+    from repro.serving import ContinuousEngine, VirtualClock, WallClock, poisson_trace
+    from repro.serving.engine import summarize
+
+    g = args.gen_len
+    trace = poisson_trace(
+        args.traffic, args.arrival_rate, vocab_size=cfg.vocab_size,
+        prompt_lens=(max(4, args.prompt_len // 2), args.prompt_len),
+        gen_lens=tuple(sorted({max(1, g // 4), max(1, g // 2), g})),
+        seed=0)
+    max_len = args.prompt_len + g + args.chunk + 8
+    clock = VirtualClock() if args.virtual_clock else WallClock()
+    engine = ContinuousEngine(
+        bundle, params, num_slots=args.num_slots, max_len=max_len,
+        chunk=args.chunk, eos_id=args.eos_id,
+        cache_dtype=jnp.dtype(cfg.dtype), temperature=args.temperature,
+        clock=clock)
+    results = engine.run(trace)
+    agg = summarize(results)
+    print(f"[serve] continuous: {agg['requests']} requests in "
+          f"{agg['span_s']:.2f}s engine-clock "
+          f"({agg['requests_per_s']:.2f} req/s, {engine.chunks_run} chunks)")
+    print(f"[serve]   latency p50 {agg['latency_p50_s']*1e3:.0f} ms  "
+          f"p95 {agg['latency_p95_s']*1e3:.0f} ms  "
+          f"queue-wait mean {agg['queue_wait_mean_s']*1e3:.0f} ms  "
+          f"TTFT mean {agg['ttft_mean_s']*1e3:.0f} ms")
+    print(f"[serve]   per-request decode mean {agg['decode_tok_per_s_mean']:.1f} tok/s "
+          f"({agg['new_tokens_total']} tokens total)")
+    first = results[trace[0].rid][0]
+    print("[serve] sample:", first[:12].tolist())
+    return agg
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -120,6 +171,19 @@ def main(argv=None):
     ap.add_argument("--loop-mode", choices=("fused", "step"), default="fused")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--traffic", type=int, default=0, metavar="N",
+                    help="replay N Poisson-arrival requests through the "
+                         "continuous-batching engine (0 = single static batch)")
+    ap.add_argument("--arrival-rate", type=float, default=4.0,
+                    help="--traffic Poisson arrival rate, requests/s")
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="--traffic KV-cache slot pool size")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="--traffic decode tokens per dispatch between "
+                         "admission/retirement points")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="--traffic: compute-time virtual clock (no sleeps; "
+                         "reproducible) instead of wall clock")
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
@@ -136,6 +200,9 @@ def main(argv=None):
             params, cfg, calib, args.ratio, method="dobi_noremap", quantize=False)
         print(f"[serve] compressed to ratio {args.ratio}: "
               f"ranks {min(kmap.values())}..{max(kmap.values())}")
+
+    if args.traffic > 0:
+        return run_traffic(bundle, params, args, cfg)
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)

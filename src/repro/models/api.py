@@ -41,8 +41,10 @@ class ModelBundle:
     def generate(self, params, batch, gen_len: int, *, eos_id: int | None = None,
                  cache_dtype=jnp.bfloat16, max_len: int | None = None,
                  temperature: float = 0.0, rng=None):
-        """Fused generation: prefill + the entire decode loop as one compiled
-        `lax.scan`, KV cache and token buffer donated (updated in place).
+        """One-shot fused generation: prefill + the entire decode loop as one
+        compiled `lax.scan`, KV cache and token buffer donated (updated in
+        place). For request-level continuous batching over the same model,
+        use serving.ContinuousEngine (docs/serving.md).
 
         `batch` is a prefill batch dict or a bare (B, S) token array. Returns
         (tokens (B, gen_len) int32, stats). Donation contract: do not reuse a
@@ -87,6 +89,29 @@ class ModelBundle:
         return jax.eval_shape(
             lambda p: self.init_cache(p, batch, max_len, dtype), params_spec
         )
+
+    def cache_slot_axes(self, max_len: int = 16) -> Any:
+        """Per-leaf batch ("slot") axis of the cache pytree, as a pytree of
+        ints with the cache's structure.
+
+        The batch axis sits at a different depth per leaf family — KV leaves
+        are (*stack, B, S, KVH, Dh), mamba conv (*stack, B, W-1, C), mamba
+        state (*stack, B, H, P, N), with per-template stack depths — so it is
+        discovered structurally: diff the shapes of a 1-slot and a 2-slot
+        cache spec (no device allocation); the single differing axis is the
+        slot axis. serving/engine.py uses this to write one request's
+        prefilled cache into its pool slot.
+        """
+        one = self.cache_specs(1, max_len)
+        two = self.cache_specs(2, max_len)
+
+        def axis(a, b):
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+            if len(diff) != 1:
+                raise ValueError(f"ambiguous slot axis: {a.shape} vs {b.shape}")
+            return diff[0]
+
+        return jax.tree.map(axis, one, two)
 
 
 def _lm_bundle(cfg: ModelConfig) -> ModelBundle:

@@ -1,14 +1,21 @@
-"""Fused generation engine: the whole decode loop as ONE compiled program.
+"""Fused generation engine: the decode loop as compiled `lax.scan` programs.
 
 The serving hot path used to dispatch one `jit(decode_step)` call per
 generated token from Python, and — with nothing donated — XLA copied the full
-(B, S_max, KVH, Dh) KV cache on every step. Here prefill and the entire
-greedy/sampled decode loop run as two dispatches total:
+(B, S_max, KVH, Dh) KV cache on every step. This module compiles the loop
+itself, in two granularities:
 
-  1. `prefill(params, batch, cache)`      — cache argument donated;
-  2. `decode_loop(params, logits0, cache, buf, start, rng, temperature)`
-     — one `lax.scan` over token steps, with the KV cache and the (B, gen_len)
-       token buffer donated so XLA updates them in place.
+  * **one-shot fused** (`make_decode_loop`, `GenerationEngine.generate`) —
+    prefill plus the ENTIRE decode loop as two dispatches total: one
+    `lax.scan` over all `gen_len` steps, KV cache and (B, gen_len) token
+    buffer donated so XLA updates them in place. Optimal for a fixed batch
+    that starts and finishes together.
+  * **chunked** (`make_chunk_loop`, `GenerationEngine.chunk_loop`) — decode
+    `chunk` tokens per dispatch against per-slot (B,) lengths, then return to
+    the host so a continuous-batching layer (serving/engine.py) can retire
+    finished slots and admit queued requests before resuming. Admission only
+    changes array VALUES (lengths/alive/tokens), never shapes, so it never
+    recompiles.
 
 Donation contract: callers must NOT reuse a cache or token buffer after
 passing it to the engine — the backing buffers are aliased into the outputs.
@@ -22,6 +29,7 @@ from __future__ import annotations
 
 import functools
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +96,66 @@ def make_decode_loop(decode_step, eos_id: int | None = None):
     return loop
 
 
+def select_token_per_slot(logits, rng, seeds, positions, temperature,
+                          do_sample: bool) -> jnp.ndarray:
+    """Per-slot token selection for continuous batching.
+
+    Unlike `select_token` (one key per STEP, shared across the batch — fine
+    when the whole batch is one request group), each slot here folds its own
+    `(request seed, absolute position)` into the base key, so a request's
+    sampled tokens do not depend on which other requests share the batch or
+    when it was admitted.
+    """
+    if not do_sample:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    keys = jax.vmap(lambda sd, p: jax.random.fold_in(jax.random.fold_in(rng, sd), p))(
+        seeds, positions)
+    return jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(keys, scaled).astype(jnp.int32)
+
+
+def make_chunk_loop(decode_step, eos_id: int | None, chunk: int):
+    """Build the chunked decode loop for continuous batching.
+
+    Returned signature (jit with the cache donated, argnum 2):
+        loop(params, tok, cache, lengths, alive, seeds, rng, temperature,
+             *, do_sample=False)
+          -> (toks (B, chunk), tok' (B,), cache, lengths' (B,), alive' (B,))
+
+    One dispatch decodes `chunk` tokens for every slot of the fixed-size
+    batch as a `lax.scan` over `decode_step` with per-slot (B,) `lengths`
+    (each slot at its own cache depth — see the slot contract in
+    models/transformer.py:decode_step). `tok` is each slot's last emitted
+    token; `seeds` are per-request sampling seeds (see
+    `select_token_per_slot`).
+
+    Shapes never change across calls — retiring/admitting requests between
+    chunks only rewrites VALUES of `tok`/`lengths`/`alive` (and the admitted
+    slot's cache slice), so admission never triggers a recompile.
+
+    Slots with `alive=False` (finished or empty) still run through the model
+    — the batch shape is fixed — but their emitted tokens are frozen to
+    `eos_id` and the host discards them; their garbage KV writes land in a
+    slot that is fully overwritten by the next admission's `insert`.
+    """
+
+    def loop(params, tok, cache, lengths, alive, seeds, rng, temperature,
+             *, do_sample: bool = False):
+        def body(carry, _):
+            tok, cache, lengths, alive = carry
+            logits, cache = decode_step(params, tok, cache, lengths)
+            nxt = select_token_per_slot(logits, rng, seeds, lengths + 1,
+                                        temperature, do_sample)
+            nxt, alive = freeze_finished(nxt, alive, eos_id)
+            return (nxt, cache, lengths + 1, alive), nxt
+
+        (tok, cache, lengths, alive), toks = jax.lax.scan(
+            body, (tok, cache, lengths, alive), None, length=chunk)
+        return toks.T, tok, cache, lengths, alive
+
+    return loop
+
+
 def live_token_counts(toks, eos_id: int | None) -> np.ndarray:
     """Per-sequence generated-token counts up to and including the first EOS
     (frozen tail positions are pad work, not generated tokens)."""
@@ -99,10 +167,11 @@ def live_token_counts(toks, eos_id: int | None) -> np.ndarray:
 
 
 class GenerationEngine:
-    """Compiled prefill + fused decode loop for one ModelBundle.
+    """Compiled prefill + decode loops (fused one-shot and chunked) for one
+    ModelBundle.
 
     Construct once (or via `get_engine`) and reuse: the jitted callables carry
-    the compilation cache. `eos_id` is baked into the compiled loop.
+    the compilation cache. `eos_id` is baked into the compiled loops.
     """
 
     def __init__(self, bundle, *, eos_id: int | None = None):
@@ -112,6 +181,18 @@ class GenerationEngine:
         self._loop = jax.jit(
             make_decode_loop(bundle.decode_step, eos_id),
             donate_argnums=(2, 3), static_argnames=("do_sample",))
+        self._chunk_loops: dict[int, Any] = {}
+
+    def chunk_loop(self, chunk: int):
+        """The jitted chunked decode loop for `chunk` tokens per dispatch
+        (cache donated; see `make_chunk_loop` for signature and the
+        no-recompile-on-admission contract). One compile per chunk size."""
+        fn = self._chunk_loops.get(chunk)
+        if fn is None:
+            fn = jax.jit(make_chunk_loop(self.bundle.decode_step, self.eos_id, chunk),
+                         donate_argnums=(2,), static_argnames=("do_sample",))
+            self._chunk_loops[chunk] = fn
+        return fn
 
     def start_length(self, prompt_len: int) -> int:
         cfg = self.bundle.cfg
@@ -121,9 +202,16 @@ class GenerationEngine:
     def generate(self, params, batch, gen_len: int, *,
                  cache_dtype=jnp.bfloat16, max_len: int | None = None,
                  temperature: float = 0.0, rng=None):
-        """Run prefill + the whole decode loop. `batch` is the prefill batch
-        dict (or a bare (B, S) token array). Returns (tokens (B, gen_len),
-        stats). Two device dispatches total, caches donated throughout."""
+        """One-shot fused generation: prefill + the whole decode loop, two
+        device dispatches total for the fixed batch, caches donated
+        throughout. (Continuous batching uses `chunk_loop` instead — many
+        dispatches, admission between them.)
+
+        `batch` is the prefill batch dict (or a bare (B, S) token array).
+        Returns (tokens (B, gen_len) int32, stats dict). Donation: the
+        internally built cache and token buffer are aliased into outputs;
+        `_final_cache` is returned by the loop so a caller could keep
+        decoding, but this method discards it."""
         if not isinstance(batch, dict):
             batch = {"tokens": batch}
         b, s = batch["tokens"].shape

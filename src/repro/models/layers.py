@@ -245,11 +245,14 @@ def decode_attention(
     q: jnp.ndarray,           # (B, 1, H, D)
     k_cache: jnp.ndarray,     # (B, S, KVH, D)
     v_cache: jnp.ndarray,
-    length: jnp.ndarray | int,  # valid cache length (scalar)
+    length: jnp.ndarray | int,  # valid cache length: scalar, or (B,) per-row
     *,
     window: int = 0,
 ) -> jnp.ndarray:
     """Single-token decode attention against a (possibly padded) KV cache.
+
+    A (B,) `length` masks each batch row at its own position (continuous
+    batching: one KV-cache slot per row, each at a different depth).
 
     GQA-aware: the query is reshaped to (B, 1, KVH, G, D) and contracted
     against the cache directly — the KV tensors are never repeated G× nor

@@ -158,12 +158,23 @@ def read_stack_slice(stacked: jnp.ndarray, idx: tuple) -> jnp.ndarray:
 def write_stack_slot(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
                      slot) -> jnp.ndarray:
     """Write a (B, 1, KVH, Dh) token update at `slot` of layer `idx` of a
-    stacked cache leaf — a one-slot dynamic_update_slice, NOT a full-layer
-    copy, so XLA updates a donated scan carry in place."""
-    depth = len(idx)
-    upd = update.astype(stacked.dtype).reshape((1,) * depth + update.shape)
-    start = tuple(idx) + (0, jnp.asarray(slot, jnp.int32)) + (0,) * (update.ndim - 2)
-    return jax.lax.dynamic_update_slice(stacked, upd, start)
+    stacked cache leaf — a one-slot write, NOT a full-layer copy, so XLA
+    updates a donated scan carry in place.
+
+    `slot` is a scalar (all sequences at the same position — the fixed-batch
+    fused loop) or a (B,) vector (continuous batching: each KV-cache slot is
+    at its own position). The scalar form lowers to a dynamic_update_slice;
+    the vector form to a batched scatter with one row index per sequence.
+    """
+    slot = jnp.asarray(slot, jnp.int32)
+    if slot.ndim == 0:
+        depth = len(idx)
+        upd = update.astype(stacked.dtype).reshape((1,) * depth + update.shape)
+        start = tuple(idx) + (0, slot) + (0,) * (update.ndim - 2)
+        return jax.lax.dynamic_update_slice(stacked, upd, start)
+    b = update.shape[0]
+    upd = update.astype(stacked.dtype).reshape((b,) + update.shape[2:])
+    return stacked.at[tuple(idx) + (jnp.arange(b), slot)].set(upd)
 
 
 def decode_attention_layer(
@@ -177,14 +188,19 @@ def decode_attention_layer(
     written in place into the stacked buffer (one slot per leaf), and the
     whole stack is returned: inside the fused decode loop the stack is a
     donated `lax.scan` carry, so no per-step cache copy exists anywhere.
+
+    `length` is a scalar (every sequence at the same position) or a (B,)
+    vector (continuous batching: each slot decodes at its own position —
+    per-slot RoPE positions, per-slot KV write slot, per-slot valid count).
     """
     b = x.shape[0]
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
-    positions = jnp.full((1,), length, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    positions = jnp.full((1,), length, jnp.int32) if length.ndim == 0 else length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions)
 
     s_cache = cache.k.shape[len(idx) + 1]
-    slot = jnp.asarray(length, jnp.int32) % s_cache
+    slot = length % s_cache
     new_k = write_stack_slot(cache.k, k, idx, slot)
     new_v = write_stack_slot(cache.v, v, idx, slot)
     layer_k = read_stack_slice(new_k, idx)
@@ -649,13 +665,19 @@ def decode_step(
     token: jnp.ndarray,        # (B,) int32 — current input token
     cfg: ModelConfig,
     cache: dict,
-    length,                    # scalar int — tokens already in cache
+    length,                    # scalar int, or (B,) int32 per-slot lengths
 ) -> tuple[jnp.ndarray, dict]:
     """One decode step: returns (logits (B, V), new_cache).
 
     Scan contract (models/generate.py runs this as a `lax.scan` body): no
     Python control flow on `length`, and every cache leaf comes back with the
     shape/dtype it went in with, so the cache can be a donated scan carry.
+
+    Slot contract (serving/engine.py runs this under continuous batching):
+    when `length` is a (B,) vector, batch row b is an independent KV-cache
+    slot decoding at its own position — RoPE, the KV write slot, and the
+    attention valid-count are all per-row, and no computation mixes rows, so
+    a slot's output depends only on that slot's cache contents.
     """
     length = jnp.asarray(length, jnp.int32)
     x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))

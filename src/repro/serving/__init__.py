@@ -1,0 +1,24 @@
+"""Continuous-batching serving layer (see docs/serving.md).
+
+Turns the compiled decode loops of models/generate.py into a request-level
+engine: a `RequestQueue` feeds a fixed pool of KV-cache slots owned by a
+`SlotManager`; the `ContinuousEngine` decodes all slots in chunked compiled
+scans, retiring EOS/length-capped requests and admitting queued ones at chunk
+boundaries — a single long request no longer stalls the whole batch.
+"""
+
+from repro.serving.engine import ContinuousEngine
+from repro.serving.request import Request, RequestQueue, RequestStats
+from repro.serving.slots import SlotManager
+from repro.serving.traffic import VirtualClock, WallClock, poisson_trace
+
+__all__ = [
+    "ContinuousEngine",
+    "Request",
+    "RequestQueue",
+    "RequestStats",
+    "SlotManager",
+    "VirtualClock",
+    "WallClock",
+    "poisson_trace",
+]

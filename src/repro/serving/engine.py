@@ -1,0 +1,276 @@
+"""Continuous-batching engine: chunked compiled decode over a slot pool.
+
+The fused one-shot loop (models/generate.py) serves one fixed batch end to
+end: a single long request stalls every batch row, and queued requests wait
+for the whole generation to drain. This engine instead owns `num_slots`
+KV-cache slots (the batch rows of ONE pooled, donated cache) and interleaves
+requests through them:
+
+  admit   — pop arrived requests into free slots: a batch-1 prefill fills a
+            fresh cache, `_insert` writes it into the pool at the slot's
+            batch offset (whole-slot overwrite — this is the slot reset; no
+            stale KV from the previous occupant survives), and the first
+            token is sampled from the prefill logits (TTFT is measured here).
+  decode  — one compiled dispatch decodes `chunk` tokens for ALL slots
+            (models/generate.py:make_chunk_loop) with per-slot lengths; the
+            pooled cache is donated through every dispatch, so the engine
+            holds exactly one cache allocation for its whole lifetime.
+  retire  — sync the chunk to host, fold tokens into each request, retire
+            EOS/length-capped requests, and loop back to admit. Shapes never
+            change, so admission/retirement never recompiles.
+
+Every stat is per-request (queue wait, TTFT, decode tok/s) — see
+request.RequestStats. Engine time comes from a pluggable clock
+(traffic.WallClock for live replay, traffic.VirtualClock for reproducible
+benchmarks).
+
+Donation contract: the pool cache, once handed to `_insert` or the chunk
+loop, is aliased into the returned pool — the engine never re-reads an old
+pool reference. Callers never see the pool at all; they get per-request token
+arrays.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.generate import get_engine, select_token_per_slot
+from repro.serving.request import Request, RequestQueue, RequestStats
+from repro.serving.slots import SlotManager
+from repro.serving.traffic import WallClock
+
+
+def make_slot_insert(axes):
+    """Build `insert(pool, one, slot)`: write a 1-slot cache pytree into the
+    pool at batch offset `slot`, per-leaf along its discovered slot axis
+    (models/api.py:cache_slot_axes). Jitted with the pool donated, this is an
+    in-place whole-slot overwrite — the admission-time slot reset."""
+
+    def insert(pool, one, slot):
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def ins(p, o, ax):
+            starts = tuple(slot if i == ax else 0 for i in range(p.ndim))
+            return jax.lax.dynamic_update_slice(p, o.astype(p.dtype), starts)
+
+        return jax.tree.map(ins, pool, one, axes)
+
+    return insert
+
+
+class ContinuousEngine:
+    """In-flight batching over `num_slots` KV-cache slots (module docstring
+    has the admit/decode/retire lifecycle; docs/serving.md has the diagram).
+
+    `max_len` sizes every slot's cache (the longest prefix+prompt+generation
+    the engine accepts, plus up to `chunk` slack while a finished slot waits
+    to retire at the next boundary). `chunk` trades scheduling latency
+    against dispatch overhead: admission/retirement can only happen every
+    `chunk` tokens.
+
+    Decoder-only token-prompt models only (uniform/gemma/zamba templates);
+    encoder–decoder and prefix-embedding (VLM) bundles are rejected — their
+    prefill consumes modality inputs the admission path doesn't thread yet.
+    """
+
+    def __init__(self, bundle, params, *, num_slots: int, max_len: int,
+                 chunk: int = 8, eos_id: int | None = None,
+                 cache_dtype=jnp.bfloat16, temperature: float = 0.0,
+                 rng=None, clock=None):
+        cfg = bundle.cfg
+        if cfg.is_encoder_decoder or cfg.family in ("audio", "vlm"):
+            raise NotImplementedError(
+                f"continuous batching supports decoder-only token-prompt "
+                f"models; got family={cfg.family!r}")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.bundle = bundle
+        self.params = params
+        self.max_len = max_len
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self.cache_dtype = cache_dtype
+        self.temperature = float(temperature)
+        self.do_sample = self.temperature > 0.0
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.clock = clock if clock is not None else WallClock()
+
+        # get_engine: the same cached GenerationEngine that bundle.generate
+        # uses, so admission prefill shares its jitted (donated) prefill and
+        # compile cache with one-shot/solo runs instead of re-tracing them
+        self.gen = get_engine(bundle, eos_id)
+        self._chunk_fn = self.gen.chunk_loop(chunk)
+        self._prefill = self.gen._prefill
+        self._insert = jax.jit(make_slot_insert(bundle.cache_slot_axes()),
+                               donate_argnums=(0,))
+        # the ONE cache allocation: (num_slots, max_len) per layer, donated
+        # through every insert/chunk dispatch for the engine's lifetime
+        self.pool = bundle.init_cache(params, num_slots, max_len=max_len,
+                                      dtype=cache_dtype)
+        self.slots = SlotManager(num_slots)
+        self.queue = RequestQueue()
+        self.results: dict[int, tuple[np.ndarray, RequestStats]] = {}
+        self._on_finish: Callable | None = None
+        self._scratch = None    # recycled batch-1 admission cache, see _admit
+        self.chunks_run = 0
+
+    def reset(self, clock) -> None:
+        """Forget completed requests and restart the clock for another run.
+        The pool cache, compiled callables, and scratch buffer are kept, so a
+        repeat run pays no compiles (benchmark warm-up passes use this). Only
+        valid when fully drained."""
+        if self.slots.num_active or self.queue:
+            raise RuntimeError("reset() with requests still in flight")
+        self.results = {}
+        self.chunks_run = 0
+        self.clock = clock
+
+    # ---- submission -------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Enqueue a request; it becomes schedulable once the engine clock
+        reaches its `arrival_time`."""
+        start = self.gen.start_length(len(request.prompt))
+        if start + request.max_new_tokens + self.chunk > self.max_len:
+            raise ValueError(
+                f"request {request.rid}: prompt {len(request.prompt)} + "
+                f"max_new_tokens {request.max_new_tokens} + chunk slack "
+                f"{self.chunk} exceeds max_len {self.max_len}")
+        self.queue.push(request)
+
+    # ---- lifecycle steps --------------------------------------------------
+    def _admit(self, request: Request, slot: int) -> None:
+        stats = RequestStats(rid=request.rid, arrival_time=request.arrival_time,
+                             prompt_len=len(request.prompt))
+        stats.admit_time = self.clock.now()
+        t0 = time.perf_counter()
+        # The batch-1 admission cache is recycled across admissions: prefill
+        # donates it and returns an aliased buffer, insert only READS it, so
+        # it is immediately reusable. Positions past this prompt may hold a
+        # previous admission's K/V — never visible, because decode overwrites
+        # position p before any valid-count mask can include p (same
+        # masked-region argument as the pool slots themselves; the leak test
+        # poisons the pool to pin this down).
+        if self._scratch is None:
+            self._scratch = self.bundle.init_cache(
+                self.params, 1, max_len=self.max_len, dtype=self.cache_dtype)
+        logits, cache1 = self._prefill(
+            self.params, {"tokens": jnp.asarray(request.prompt)[None]},
+            self._scratch)
+        self.pool = self._insert(self.pool, cache1, slot)
+        self._scratch = cache1
+        start = self.gen.start_length(len(request.prompt))
+        # fold key = (request seed, absolute position the token will occupy)
+        # — the same invariant the chunk loop uses, so sampling is
+        # batch-composition independent from the very first token
+        tok0 = select_token_per_slot(
+            logits, self.rng, jnp.asarray([request.seed], jnp.int32),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(self.temperature, jnp.float32), self.do_sample)
+        tok0 = int(jax.block_until_ready(tok0)[0])
+        self.clock.advance(time.perf_counter() - t0)
+        stats.first_token_time = self.clock.now()
+        self.slots.admit(slot, request, stats, tok0, start)
+        if request.on_token is not None:
+            request.on_token(request, tok0)
+        if request.max_new_tokens == 1 or (self.eos_id is not None
+                                           and tok0 == self.eos_id):
+            self._retire(slot)
+
+    def _try_admit(self) -> None:
+        while True:
+            slot = self.slots.free_slot()
+            if slot is None:
+                return
+            request = self.queue.pop_arrived(self.clock.now())
+            if request is None:
+                return
+            self._admit(request, slot)
+
+    def _step_chunk(self) -> None:
+        s = self.slots
+        t0 = time.perf_counter()
+        toks, tok, self.pool, lengths, alive = self._chunk_fn(
+            self.params, jnp.asarray(s.tok), self.pool,
+            jnp.asarray(s.lengths), jnp.asarray(s.alive),
+            jnp.asarray(s.seeds), self.rng,
+            jnp.asarray(self.temperature, jnp.float32),
+            do_sample=self.do_sample)
+        toks = np.asarray(jax.block_until_ready(toks))  # the host sync point
+        self.clock.advance(time.perf_counter() - t0)
+        self.chunks_run += 1
+        # np.array (copy): the host mirrors are mutated by admissions, and
+        # np.asarray on a jax array returns a read-only view
+        s.tok = np.array(tok)
+        s.lengths = np.array(lengths)
+        s.alive = np.array(alive)
+        for slot in s.active_slots():
+            if s.accept_chunk(slot, toks[slot], self.eos_id):
+                self._retire(slot)
+
+    def _retire(self, slot: int) -> None:
+        request, stats, tokens = self.slots.retire(slot)
+        stats.finish_time = self.clock.now()
+        self.results[request.rid] = (tokens, stats)
+        if self._on_finish is not None:
+            self._on_finish(request, tokens, stats)
+
+    # ---- main loop --------------------------------------------------------
+    def run(self, requests: Iterable[Request] = (), *,
+            on_finish: Callable | None = None
+            ) -> dict[int, tuple[np.ndarray, RequestStats]]:
+        """Serve until every submitted request has retired.
+
+        Returns {rid: (tokens (new_tokens,) int32, RequestStats)}; also
+        streams each retirement through `on_finish(request, tokens, stats)`.
+        Idle periods (no active slot, next arrival in the future) are skipped
+        by `clock.wait_until` — a sleep on the wall clock, a jump on the
+        virtual one.
+        """
+        for r in requests:
+            self.submit(r)
+        self._on_finish = on_finish
+        while self.queue or self.slots.num_active:
+            self._try_admit()
+            if self.slots.num_active == 0:
+                nxt = self.queue.next_arrival()
+                if nxt is None:
+                    break
+                self.clock.wait_until(nxt)
+                continue
+            self._step_chunk()
+        return self.results
+
+
+def summarize(results: dict[int, tuple[np.ndarray, RequestStats]]) -> dict:
+    """Aggregate per-request stats into the serving headline numbers.
+
+    `requests_per_s` is request-level throughput: completed requests over the
+    engine-clock span from the first arrival to the last retirement — the
+    quantity continuous batching improves even when per-token decode speed is
+    unchanged. Latency percentiles are per-request arrival→finish.
+    """
+    stats = [st for _, st in results.values()]
+    if not stats:
+        return {"requests": 0}
+    lat = np.array([st.latency_s for st in stats])
+    span = max(max(st.finish_time for st in stats)
+               - min(st.arrival_time for st in stats), 1e-9)
+    # 1-token requests have no decode phase; averaging their 0.0 in would
+    # deflate the mean this stat promises is BENCH_decode-comparable
+    decoded = [st.decode_tok_per_s for st in stats if st.new_tokens > 1]
+    return {
+        "requests": len(stats),
+        "span_s": span,
+        "requests_per_s": len(stats) / span,
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p95_s": float(np.percentile(lat, 95)),
+        "queue_wait_mean_s": float(np.mean([st.queue_wait_s for st in stats])),
+        "ttft_mean_s": float(np.mean([st.ttft_s for st in stats])),
+        "decode_tok_per_s_mean": float(np.mean(decoded)) if decoded else 0.0,
+        "new_tokens_total": int(sum(st.new_tokens for st in stats)),
+    }

@@ -1,0 +1,134 @@
+"""Requests, per-request stats, and the arrival queue.
+
+A `Request` is one user generation call: a prompt, a token budget, and an
+arrival time on the engine clock. The engine fills in a `RequestStats` as the
+request moves through the queue → slot → retired lifecycle; all stats are
+per-REQUEST (queue wait, TTFT, decode tok/s), never per-batch, so numbers
+stay comparable with the single-request figures in BENCH_decode.json.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request.
+
+    `prompt` is a 1-D int32 token array (host numpy; the engine moves it to
+    device at admission). `max_new_tokens` caps generation; EOS can finish a
+    request earlier. `arrival_time` is on the engine's clock (seconds since
+    engine start); requests submitted with a future arrival stay invisible to
+    the scheduler until the clock reaches it (traffic replay). `seed` feeds
+    per-request sampling (see models/generate.py:select_token_per_slot) so
+    sampled output does not depend on batch composition. `on_token` (if set)
+    streams each accepted token as `on_token(request, token)` at chunk
+    granularity.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    seed: int = 0
+    on_token: Callable[["Request", int], None] | None = None
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+
+@dataclass
+class RequestStats:
+    """Per-request lifecycle timestamps (engine-clock seconds) and derived
+    serving metrics. `finish_time` is recorded at the chunk boundary where
+    the request retired, so decode throughput is measured at chunk
+    granularity (at most `chunk-1` tokens of slack)."""
+
+    rid: int
+    arrival_time: float
+    prompt_len: int
+    admit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    new_tokens: int = 0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.admit_time - self.arrival_time
+
+    @property
+    def ttft_s(self) -> float:
+        """Time to first token: arrival → first generated token (the token
+        sampled from the admission prefill's logits)."""
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency_s(self) -> float:
+        return self.finish_time - self.arrival_time
+
+    @property
+    def decode_tok_per_s(self) -> float:
+        """This request's decode-phase throughput: tokens after the first one
+        over the time from first token to retirement. A 1-token request has
+        no decode phase — callers aggregating throughput should skip it (as
+        engine.summarize does) rather than average in its 0.0."""
+        return max(self.new_tokens - 1, 0) / max(self.finish_time - self.first_token_time, 1e-9)
+
+    def as_dict(self) -> dict:
+        return {
+            "rid": self.rid,
+            "prompt_len": self.prompt_len,
+            "new_tokens": self.new_tokens,
+            "queue_wait_s": self.queue_wait_s,
+            "ttft_s": self.ttft_s,
+            "latency_s": self.latency_s,
+            "decode_tok_per_s": self.decode_tok_per_s,
+        }
+
+
+@dataclass(order=True)
+class _Entry:
+    arrival_time: float
+    order: int
+    request: Request = field(compare=False)
+
+
+class RequestQueue:
+    """Arrival-ordered queue with clock gating.
+
+    `push` accepts requests in any order; `pop_arrived(now)` releases the
+    earliest-arriving request whose `arrival_time <= now` (FIFO within equal
+    arrivals via a tiebreaker counter). `next_arrival()` lets an idle engine
+    jump/sleep its clock to the next future request.
+    """
+
+    def __init__(self):
+        self._heap: list[_Entry] = []
+        self._count = 0
+
+    def push(self, request: Request) -> None:
+        heapq.heappush(self._heap, _Entry(request.arrival_time, self._count, request))
+        self._count += 1
+
+    def pop_arrived(self, now: float) -> Request | None:
+        if self._heap and self._heap[0].arrival_time <= now:
+            return heapq.heappop(self._heap).request
+        return None
+
+    def next_arrival(self) -> float | None:
+        return self._heap[0].arrival_time if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,110 @@
+"""Slot bookkeeping for the continuous-batching engine.
+
+A "slot" is one batch row of the pooled KV cache. The `SlotManager` owns the
+host-side mirrors of the per-slot decode state — `tok` (last emitted token),
+`lengths` (cache depth), `alive` (still generating), `seeds` (sampling seed)
+— plus which request occupies which slot and the tokens collected so far.
+
+Device state (the pooled cache) lives in `ContinuousEngine`; the manager only
+rewrites VALUES in these fixed-shape (num_slots,) vectors, which is what lets
+admission/retirement happen between compiled chunks without recompiling.
+
+A free slot keeps `alive=False`: the chunk loop still decodes it (batch shape
+is fixed) but its output is frozen/discarded, and its cache slice is fully
+overwritten by the next admission's insert — stale KV from a retired request
+can never reach a later request's attention (tested in
+tests/test_continuous_batching.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.request import Request, RequestStats
+
+
+class SlotManager:
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.requests: list[Request | None] = [None] * num_slots
+        self.stats: list[RequestStats | None] = [None] * num_slots
+        self.collected: list[list[int]] = [[] for _ in range(num_slots)]
+        # fixed-shape host mirrors of the chunk loop's per-slot carries
+        self.tok = np.zeros(num_slots, np.int32)
+        self.lengths = np.zeros(num_slots, np.int32)
+        self.alive = np.zeros(num_slots, bool)
+        self.seeds = np.zeros(num_slots, np.int32)
+
+    # ---- queries ----------------------------------------------------------
+    def free_slot(self) -> int | None:
+        for i, r in enumerate(self.requests):
+            if r is None:
+                return i
+        return None
+
+    def active_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.requests) if r is not None]
+
+    @property
+    def num_active(self) -> int:
+        return sum(r is not None for r in self.requests)
+
+    # ---- lifecycle --------------------------------------------------------
+    def admit(self, slot: int, request: Request, stats: RequestStats,
+              first_token: int, start_len: int) -> None:
+        """Bind `request` to `slot` with its prefill-produced first token.
+
+        `start_len` is the cache depth after prefill (prefix + prompt); the
+        slot's next decode step reads/writes at that position.
+        """
+        assert self.requests[slot] is None, f"slot {slot} still occupied"
+        self.requests[slot] = request
+        self.stats[slot] = stats
+        self.collected[slot] = [int(first_token)]
+        self.tok[slot] = first_token
+        self.lengths[slot] = start_len
+        self.alive[slot] = True
+        self.seeds[slot] = request.seed
+        stats.new_tokens = 1
+
+    def retire(self, slot: int) -> tuple[Request, RequestStats, np.ndarray]:
+        """Free `slot`, returning its request, stats, and generated tokens."""
+        request, stats = self.requests[slot], self.stats[slot]
+        assert request is not None and stats is not None
+        tokens = np.asarray(self.collected[slot], np.int32)
+        stats.new_tokens = len(tokens)
+        self.requests[slot] = None
+        self.stats[slot] = None
+        self.collected[slot] = []
+        self.alive[slot] = False
+        return request, stats, tokens
+
+    def accept_chunk(self, slot: int, row: np.ndarray, eos_id: int | None) -> bool:
+        """Fold one chunk's emitted tokens for `slot` into its collection.
+
+        Tokens past the request's first EOS or its `max_new_tokens` cap are
+        frozen pad work and are dropped. Streams accepted tokens through the
+        request's `on_token` callback. Returns True when the request is done
+        (EOS emitted or cap reached) and the slot should retire.
+        """
+        request = self.requests[slot]
+        assert request is not None
+        got = self.collected[slot]
+        done = False
+        for t in np.asarray(row).tolist():
+            if len(got) >= request.max_new_tokens:
+                done = True
+                break
+            got.append(int(t))
+            if request.on_token is not None:
+                request.on_token(request, int(t))
+            if eos_id is not None and int(t) == eos_id:
+                done = True
+                break
+        if len(got) >= request.max_new_tokens:
+            done = True
+        if self.stats[slot] is not None:
+            self.stats[slot].new_tokens = len(got)
+        return done

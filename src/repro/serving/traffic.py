@@ -1,0 +1,96 @@
+"""Traffic generation and engine clocks.
+
+`poisson_trace` builds the benchmark workload: exponential interarrival times
+(a Poisson arrival process) with per-request prompt/generation lengths drawn
+from small discrete sets — heterogeneous lengths are exactly the regime where
+continuous batching beats a static batch (short requests retire early and
+their slots are refilled instead of idling until the batch maximum).
+
+Two clocks drive the engine:
+
+  * `WallClock` — real time; `wait_until` sleeps. Used by the live
+    `launch/serve.py --traffic` replay.
+  * `VirtualClock` — advances only by measured device-compute durations that
+    the engine reports via `advance`, and jumps forward when idle. Used by
+    benchmarks/t24_continuous.py so static-vs-continuous comparisons measure
+    compute, not sleeps, and arrival gating stays reproducible.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+class WallClock:
+    """Real time since `start()` (lazily initialised on first use)."""
+
+    def __init__(self):
+        self._t0: float | None = None
+
+    def _ensure(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return self._t0
+
+    def now(self) -> float:
+        return time.perf_counter() - self._ensure()
+
+    def advance(self, dt: float) -> None:
+        """Real time advances by itself; measured durations are a no-op."""
+
+    def wait_until(self, t: float) -> None:
+        delay = t - self.now()
+        if delay > 0:
+            time.sleep(delay)
+
+
+class VirtualClock:
+    """Deterministic clock: time passes only when the engine says so."""
+
+    def __init__(self):
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        self._t += max(dt, 0.0)
+
+    def wait_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+
+def poisson_trace(
+    n_requests: int,
+    arrival_rate: float,
+    *,
+    vocab_size: int,
+    prompt_lens: tuple[int, ...] = (8, 12, 16),
+    gen_lens: tuple[int, ...] = (4, 8, 16, 24),
+    seed: int = 0,
+) -> list[Request]:
+    """Poisson arrivals (`arrival_rate` requests/s) with random prompts.
+
+    Prompt lengths are drawn from the small `prompt_lens` set on purpose:
+    admission prefill compiles once per distinct prompt length (prompts are
+    not padded into buckets yet — see docs/serving.md §Limits), so a bounded
+    set keeps the replay compile count bounded.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        plen = int(rng.choice(prompt_lens))
+        out.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab_size, size=plen, dtype=np.int32),
+            max_new_tokens=int(rng.choice(gen_lens)),
+            arrival_time=t,
+            seed=rid,
+        ))
+    return out
