@@ -1,12 +1,14 @@
 """Benchmark runner — one section per paper table/figure, plus the serving
-benches (t23 fused-vs-step decode, t24 continuous-vs-static batching).
+benches (t23 fused-vs-step decode, t24 continuous-vs-static batching,
+t25 artifact-load vs full recompression).
 
 Prints a human-readable section per table plus the required
 ``name,us_per_call,derived`` CSV lines at the end.
 
   PYTHONPATH=src python -m benchmarks.run [--smoke]
 
-``--smoke`` shrinks the t24 serving trace for CI-sized runs.
+``--smoke`` shrinks the t24 serving trace and the t25 arch sweep for
+CI-sized runs.
 """
 
 from __future__ import annotations
@@ -32,7 +34,7 @@ def main(argv=None):
     argv = argv if argv is not None else sys.argv[1:]
 
     from benchmarks import t1_truncation, t2_methods, t8_remap, t15_t16_t17, t23_speed
-    from benchmarks import kernels_bench, t24_continuous
+    from benchmarks import kernels_bench, t24_continuous, t25_artifact
 
     smoke = "--smoke" in argv
     sections = [
@@ -42,6 +44,7 @@ def main(argv=None):
         ("t15_t16_t17_fig3", t15_t16_t17.main),
         ("t23_speed", t23_speed.main),
         ("t24_continuous", lambda: t24_continuous.main(smoke=smoke)),
+        ("t25_artifact", lambda: t25_artifact.main(smoke=smoke)),
         ("kernels", kernels_bench.main),
     ]
 

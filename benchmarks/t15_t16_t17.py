@@ -52,11 +52,12 @@ def run_t16(ratios=(0.8, 0.6, 0.4), steps=40):
     calib = common.calib_batches(cfg, n=2)
     rows, traces = [], {}
     for ratio in ratios:
-        result, soft_ks, _, _ = rank_train_run(
+        result = rank_train_run(
             cfg, ratio=ratio, steps=steps, batch=4, seq=32,
             svd_rank_cap=None, remap=False, params=params,
             data_cfg=common.data_config(cfg, seq=32, batch=4),
         )
+        soft_ks = result.soft_ks
         traces[ratio] = result.trace
         p_tr, _ = compress_model_params(
             params, cfg, calib, ratio, method="dobi_noremap",
@@ -94,10 +95,11 @@ def run_t17(ratio=0.5, deltas=(0, 1, 2, 4, 8)):
     from repro.core import planner as planner_lib
     specs = [planner_lib.MatrixSpec(nm, *shapes_map[nm]) for nm in names]
     # perturb the TRAINED allocation (paper setting: around the Dobi optimum)
-    result, soft_ks, _, _ = rank_train_run(
+    result = rank_train_run(
         cfg, ratio=ratio, steps=40, batch=4, seq=32,
         svd_rank_cap=None, remap=False, params=params,
         data_cfg=common.data_config(cfg, seq=32, batch=4))
+    soft_ks = result.soft_ks
     ks0 = planner_lib.plan_from_trained_k(
         specs, [soft_ks[nm] for nm in names], ratio, remap=False)
     rows = []

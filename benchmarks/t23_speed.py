@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.launch.serve import generate
+from repro.launch.serve import generate_tokens
 from repro.models import build
 from repro.models.compression import compress_model_params
 from repro.roofline.hlo import param_count
@@ -99,15 +99,15 @@ def run_decode_loop_bench(gen_len: int = 64, batch: int = 1, prompt_len: int = 1
                                          method="dobi_noremap", quantize=False)
         toks = {}
         for mode in ("step", "fused"):   # compile both before timing
-            toks[mode], _ = generate(bundle, p, prompt, gen_len, max_len=max_len,
+            toks[mode], _ = generate_tokens(bundle, p, prompt, gen_len, max_len=max_len,
                                      cache_dtype=jnp.float32, loop_mode=mode)
         # interleave the two loop modes so background-load drift on a shared
         # box hits both equally; the paired ratio is the robust statistic
         pairs = []
         for _ in range(repeats):
-            s = generate(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
+            s = generate_tokens(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
                          loop_mode="step", max_len=max_len)[1]["decode_s"]
-            f = generate(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
+            f = generate_tokens(bundle, p, prompt, gen_len, cache_dtype=jnp.float32,
                          loop_mode="fused", max_len=max_len)[1]["decode_s"]
             pairs.append((s, f))
         steps = np.array([p_[0] for p_ in pairs])

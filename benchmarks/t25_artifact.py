@@ -1,0 +1,110 @@
+"""Artifact load vs full recompression — the compress-once/serve-many claim.
+
+The serving ROADMAP requires that a compressed model be a reusable object:
+compress once, then load and serve many times with zero IPCA/rank-train work
+on the load path. This bench times both paths on the same model and asserts
+the loaded artifact serves token-identically to the in-memory one:
+
+  * compress_s — `repro.compress` in-process (two calibration passes over
+    every eligible matrix: spectra → plan → capped IPCA → factors);
+  * save_s / load_s / apply_s — `CompressionArtifact.save`, `load_artifact`,
+    and the leaf swap into base params (no SVD anywhere).
+
+Writes BENCH_artifact.json with `speedup = compress_s / (load_s + apply_s)`.
+
+  PYTHONPATH=src python -m benchmarks.t25_artifact [--smoke]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro
+from benchmarks.common import Timer, csv_row
+from repro.configs import smoke_config
+from repro.models import build
+
+BENCH_ARTIFACT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_artifact.json")
+
+
+def run_one(arch: str, *, ratio: float = 0.5, method: str = "dobi_noremap",
+            calib_batches: int = 2, gen_len: int = 8) -> dict:
+    cfg = smoke_config(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0, cfg.vocab_size)
+             for i in range(calib_batches)]
+
+    with Timer() as t_compress:
+        art = repro.compress(cfg, params, ratio=ratio, method=method, calib=calib)
+        jax.block_until_ready(jax.tree.leaves(art.factors))
+    cparams = art.apply(params)
+
+    with tempfile.TemporaryDirectory() as d:
+        adir = os.path.join(d, "artifact")
+        with Timer() as t_save:
+            art.save(adir)
+        with Timer() as t_load:
+            art2 = repro.load_artifact(adir)
+            jax.block_until_ready(jax.tree.leaves(art2.factors))
+        with Timer() as t_apply:
+            cparams2 = art2.apply(params)
+            jax.block_until_ready(jax.tree.leaves(cparams2))
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    toks_mem, _ = bundle.generate(cparams, prompt, gen_len, cache_dtype=jnp.float32)
+    toks_art, _ = bundle.generate(cparams2, prompt, gen_len, cache_dtype=jnp.float32)
+    identical = bool((np.asarray(toks_mem) == np.asarray(toks_art)).all())
+
+    load_path = t_load.dt + t_apply.dt
+    return {
+        "arch": arch,
+        "ratio": ratio,
+        "method": method,
+        "achieved_ratio": art.report.achieved_ratio,
+        "num_matrices": art.report.num_matrices,
+        "factor_mib": art.nbytes() / 2**20,
+        "compress_s": t_compress.dt,
+        "save_s": t_save.dt,
+        "load_s": t_load.dt,
+        "apply_s": t_apply.dt,
+        "speedup_load_vs_recompress": t_compress.dt / max(load_path, 1e-9),
+        "tokens_identical": identical,
+    }
+
+
+def main(smoke: bool = False):
+    archs = ["olmo-1b"] if smoke else ["olmo-1b", "gemma3-4b", "zamba2-2.7b"]
+    rows = [run_one(a) for a in archs]
+    out = {"rows": rows}
+    with open(BENCH_ARTIFACT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+
+    print("== t25: artifact load vs full recompression ==")
+    for r in rows:
+        print(f"  {r['arch']:>14}: compress {r['compress_s']*1e3:8.1f} ms | "
+              f"load+apply {(r['load_s'] + r['apply_s'])*1e3:7.1f} ms | "
+              f"{r['speedup_load_vs_recompress']:6.1f}x | "
+              f"tokens identical: {r['tokens_identical']}")
+        print(csv_row(f"t25_artifact_{r['arch']}",
+                      (r['load_s'] + r['apply_s']) * 1e6,
+                      f"speedup={r['speedup_load_vs_recompress']:.1f}x"))
+        if not r["tokens_identical"]:
+            raise AssertionError(f"{r['arch']}: loaded artifact tokens diverged")
+        if r["speedup_load_vs_recompress"] <= 1.0:
+            raise AssertionError(
+                f"{r['arch']}: artifact load not faster than recompression "
+                f"({r['speedup_load_vs_recompress']:.2f}x)")
+    print(f"  -> {BENCH_ARTIFACT_PATH}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -21,11 +21,11 @@ METHODS = ("dobi", "dobi_noremap", "svd_llm", "asvd", "plain")
 def _trained_ks(cfg, params, ratio, remap):
     """Paper Algorithm 1: differentiable truncation-position training."""
     from repro.launch.rank_train import run as rank_train_run
-    _, soft_ks, _, _ = rank_train_run(
+    result = rank_train_run(
         cfg, ratio=ratio, steps=40, batch=4, seq=32,
         svd_rank_cap=None, remap=remap, params=params,
         data_cfg=common.data_config(cfg, seq=32, batch=4))
-    return soft_ks
+    return result.soft_ks
 
 
 def _compress_eval(cfg, params, calib, ratio, method):
@@ -36,7 +36,7 @@ def _compress_eval(cfg, params, calib, ratio, method):
             trained_soft_ks=soft_ks, quantize=(method == "dobi"))
         return common.eval_ppl(cfg, cparams)
     # baselines: per-matrix dense rank-k via core.baselines, same plumbing
-    from repro.models.compression import collect_calibration, _rebuild_params
+    from repro.models.compression import collect_calibration, rebuild_params
     from repro.core import baselines as B
     from repro.core import planner as planner_lib
     from repro.core.lowrank import lowrank_from_dense
@@ -58,7 +58,7 @@ def _compress_eval(cfg, params, calib, ratio, method):
         f = lowrank_from_dense(dense, k)
         factors[nm] = {"w1": f.w1, "w2": f.w2}
     kmap = dict(zip(names, ks))
-    cparams = _rebuild_params(params, cfg, factors, kmap, quantize=False)
+    cparams = rebuild_params(params, cfg, factors, kmap, quantize=False)
     return common.eval_ppl(cfg, cparams)
 
 

@@ -1,26 +1,30 @@
-"""Full paper pipeline end-to-end: train → rank-train (Algorithm 1) →
-IPCA weight update → remapped storage → serve, comparing dense vs compressed.
+"""Full paper pipeline end-to-end through the artifact API: train →
+`repro.compress` (Algorithm-1 θ-training → IPCA weight update → remapped
+storage) → save → load → serve, comparing dense vs compressed.
 
     PYTHONPATH=src:. python examples/compress_and_serve.py [--ratio 0.5]
 """
 
 import argparse
-import time
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common
-from repro.launch.rank_train import run as rank_train_run
-from repro.launch.serve import generate
+import repro
+from repro.launch.serve import generate_tokens
 from repro.models import build
-from repro.models.compression import compress_model_params
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--ratio", type=float, default=0.5)
     ap.add_argument("--rank-steps", type=int, default=30)
+    ap.add_argument("--artifact-dir", default="",
+                    help="where to persist the artifact (default: a temp dir)")
     args = ap.parse_args()
 
     # 1. a trained model (cached by the benchmark harness)
@@ -29,33 +33,52 @@ def main():
     base_ppl = common.eval_ppl(cfg, params)
     print(f"[1] trained proxy model: eval PPL {base_ppl:.2f}")
 
-    # 2. differentiable truncation-position training (paper Algorithm 1)
-    result, soft_ks, _, _ = rank_train_run(
-        cfg, ratio=args.ratio, steps=args.rank_steps, batch=4, seq=32,
-        svd_rank_cap=None, params=params,
+    # 2. one facade call runs the whole paper pipeline: differentiable
+    #    truncation-position training (Algorithm 1) → rank plan from the
+    #    trained soft-k's → IPCA weight update → remapped int8 storage —
+    #    and returns a CompressionArtifact carrying the report + factors.
+    art = repro.compress(
+        cfg, params, ratio=args.ratio, method="dobi", quantize=True,
+        calib=common.calib_batches(cfg, n=4),
+        train=args.rank_steps,
         data_cfg=common.data_config(cfg, seq=32, batch=4))
-    print(f"[2] rank training: loss {result.trace[0]['loss']:.3f} → "
-          f"{result.trace[-1]['loss']:.3f}, R_now {result.trace[-1]['r_now']:.3f}")
+    if "train_loss" in art.report.provenance:
+        t0, t1 = art.report.provenance["train_loss"]
+        print(f"[2] rank training: loss {t0:.3f} → {t1:.3f}, "
+              f"R_now {art.report.provenance['train_r_now']:.3f}")
+    else:
+        print("[2] rank training skipped (--rank-steps 0): "
+              "training-free energy-waterfill plan")
 
-    # 3. IPCA weight update + remapped mixed-precision storage
-    calib = common.calib_batches(cfg, n=4)
-    cparams, kmap = compress_model_params(
-        params, cfg, calib, args.ratio, method="dobi",
-        trained_soft_ks=soft_ks, quantize=True)
+    cparams = art.apply(params)
     comp_ppl = common.eval_ppl(cfg, cparams)
-    print(f"[3] compressed @ {args.ratio}: PPL {base_ppl:.2f} → {comp_ppl:.2f}; "
-          f"ranks {min(kmap.values())}..{max(kmap.values())}")
+    print(f"[3] {art.report.summary()}; PPL {base_ppl:.2f} → {comp_ppl:.2f}")
 
-    # 4. serve both through the fused engine (one compiled decode loop,
+    # 4. compress once, serve many times: persist the artifact and reload it
+    #    (no IPCA / rank-train / SVD happens on the load path)
+    adir = args.artifact_dir or os.path.join(tempfile.mkdtemp(), "artifact")
+    art.save(adir)
+    loaded = repro.load_artifact(adir)
+    cparams_loaded = bundle.with_artifact(loaded, params)
+    print(f"[4] artifact saved + reloaded from {adir} "
+          f"({art.nbytes()/2**20:.1f} MiB of factors)")
+
+    # 5. serve all three through the fused engine (one compiled decode loop,
     #    donated caches); the per-step loop rides along as the reference
     prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0, cfg.vocab_size)
-    _, s_dense = generate(bundle, params, prompt, 12, cache_dtype=jnp.float32)
-    _, s_comp = generate(bundle, cparams, prompt, 12, cache_dtype=jnp.float32)
-    _, s_step = generate(bundle, cparams, prompt, 12, cache_dtype=jnp.float32,
-                         loop_mode="step")
-    print(f"[4] serve (fused): dense {s_dense['decode_tok_per_s']:.1f} tok/s, "
+    _, s_dense = generate_tokens(bundle, params, prompt, 12, cache_dtype=jnp.float32)
+    toks_mem, s_comp = generate_tokens(bundle, cparams, prompt, 12,
+                                       cache_dtype=jnp.float32)
+    toks_art, _ = generate_tokens(bundle, cparams_loaded, prompt, 12,
+                                  cache_dtype=jnp.float32)
+    _, s_step = generate_tokens(bundle, cparams, prompt, 12,
+                                cache_dtype=jnp.float32, loop_mode="step")
+    assert (np.asarray(toks_mem) == np.asarray(toks_art)).all(), \
+        "loaded artifact must serve token-identically"
+    print(f"[5] serve (fused): dense {s_dense['decode_tok_per_s']:.1f} tok/s, "
           f"compressed {s_comp['decode_tok_per_s']:.1f} tok/s (CPU proxy); "
-          f"per-step reference {s_step['decode_tok_per_s']:.1f} tok/s")
+          f"per-step reference {s_step['decode_tok_per_s']:.1f} tok/s; "
+          f"loaded-artifact tokens identical")
 
     bytes_dense = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     bytes_comp = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cparams))

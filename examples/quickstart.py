@@ -3,18 +3,18 @@
     PYTHONPATH=src python examples/quickstart.py
 
 1. build a small Llama-family model;
-2. calibrate + compress it to a 0.5 parameter ratio with the paper pipeline
+2. `repro.compress` it to a 0.5 parameter ratio with the paper pipeline
    (IPCA activation bases → Eckart–Young–Mirsky weight update → remapped
-   mixed-precision storage);
-3. compare eval loss and parameter counts before/after.
+   mixed-precision storage) — the result is a `CompressionArtifact`;
+3. apply the artifact and compare eval loss and parameter bytes.
 """
 
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.configs.base import ModelConfig
 from repro.models import build
-from repro.models.compression import compress_model_params
 
 cfg = ModelConfig(
     name="quickstart", family="dense",
@@ -28,9 +28,10 @@ params = bundle.init(jax.random.PRNGKey(0))
 calib = [jax.random.randint(jax.random.PRNGKey(i), (4, 64), 0, cfg.vocab_size)
          for i in range(2)]
 
-compressed, ranks = compress_model_params(
-    params, cfg, calib, target_ratio=0.5, method="dobi", quantize=True,
-)
+artifact = repro.compress(cfg, params, ratio=0.5, method="dobi",
+                          quantize=True, calib=calib)
+compressed = artifact.apply(params)     # or bundle.with_artifact(artifact, params)
+# artifact.save("my-model-0.5") / repro.load_artifact(...) round-trips it
 
 batch = {
     "tokens": calib[0],
@@ -39,14 +40,12 @@ batch = {
 loss_dense = float(bundle.loss(params, batch))
 loss_comp = float(bundle.loss(compressed, batch))
 
-n_dense = sum(x.size for x in jax.tree.leaves(params))
 n_comp_bytes = sum(
     x.size * x.dtype.itemsize for x in jax.tree.leaves(compressed))
 n_dense_bytes = sum(
     x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
 
-print(f"ranks: min {min(ranks.values())}, max {max(ranks.values())} "
-      f"over {len(ranks)} matrices")
+print(artifact.report.summary())
 print(f"loss: dense {loss_dense:.4f} → compressed {loss_comp:.4f}")
 print(f"bytes: {n_dense_bytes/2**20:.1f} MiB → {n_comp_bytes/2**20:.1f} MiB "
       f"({n_comp_bytes/n_dense_bytes:.2f}x)")

@@ -1,0 +1,27 @@
+"""Dobi-SVD reproduction, grown toward a production JAX/Pallas serving stack.
+
+Top-level facade (canonical entry points — docs/api.md):
+
+    import repro
+
+    art = repro.compress(cfg, params, ratio=0.4)   # → CompressionArtifact
+    art.save("artifacts/my-model-0.4")
+    art = repro.load_artifact("artifacts/my-model-0.4")
+    servable = art.apply(params)
+
+Everything else lives in explicit submodules (`repro.models`, `repro.core`,
+`repro.serving`, …) and is intentionally NOT imported here — attribute access
+below resolves lazily so `import repro` stays free of jax-graph work.
+"""
+
+_FACADE = ("compress", "load_artifact", "CompressionArtifact",
+           "CompressionReport", "is_artifact_dir")
+
+__all__ = list(_FACADE)
+
+
+def __getattr__(name):
+    if name in _FACADE:
+        from repro import artifacts
+        return getattr(artifacts, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

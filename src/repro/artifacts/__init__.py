@@ -1,0 +1,33 @@
+"""Compression artifacts: the compress-once / serve-many subsystem.
+
+`CompressionArtifact` is the first-class compressed-model object (config
+reference + unified `CompressionReport` + factored/quantized leaves + trained
+soft-k's) with `save`/`load` built on the fault-tolerant checkpointer and
+`apply(params)` to produce servable params. `compress(...)` — re-exported at
+the top level as `repro.compress` — is the one-call facade over the whole
+calibrate/train → plan → update → remap pipeline. See docs/api.md.
+"""
+
+from repro.artifacts.report import CompressionReport
+from repro.artifacts.artifact import (
+    CompressionArtifact,
+    is_artifact_dir,
+    load_artifact,
+)
+
+__all__ = [
+    "CompressionArtifact",
+    "CompressionReport",
+    "compress",
+    "is_artifact_dir",
+    "load_artifact",
+]
+
+
+def __getattr__(name):
+    # `facade` imports models/ (which imports artifacts.report) — resolve it
+    # lazily so `repro.artifacts` stays importable from anywhere in the stack.
+    if name == "compress":
+        from repro.artifacts.facade import compress
+        return compress
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

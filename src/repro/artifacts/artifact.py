@@ -1,0 +1,173 @@
+"""CompressionArtifact — the first-class compressed-model object.
+
+Dobi-SVD's output is not just a weight pytree: it is per-matrix integer
+ranks, truncated-activation factors (or remapped int8 buffers), the trained
+soft truncation positions, and the calibration/training provenance that
+produced them (paper §3.1–§3.3). This module bundles all of that into ONE
+object so a model can be compressed once and served many times:
+
+    art = repro.compress(cfg, params, ratio=0.4)      # calibrate → plan → update
+    art.save("artifacts/olmo-0.4")                    # atomic, dtype-exact
+    ...
+    art = repro.load_artifact("artifacts/olmo-0.4")   # zero recompression
+    servable = bundle.with_artifact(art, params)      # swap compressed leaves in
+
+Storage layout (built on checkpoint/checkpointer.py — atomic commit,
+resharding restore):
+
+    <dir>/artifact.json                — config, report, soft-k's, leaf manifest
+    <dir>/factors/step_00000000/…      — the factor pytree, one npy per leaf
+
+Packed dtypes survive byte-for-byte: int8 factor rows and fp32 scales are
+saved natively, bf16 tails ride as uint16 views — `load` restores the exact
+arrays, so serving a loaded artifact is bitwise-identical to serving the
+in-memory one (tests/test_artifact.py pins this per template).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.artifacts.report import CompressionReport
+
+_FORMAT_VERSION = 1
+_MANIFEST = "artifact.json"
+_FACTORS_SUBDIR = "factors"
+
+
+@dataclass
+class CompressionArtifact:
+    """A compressed model: config reference + unified report + factor leaves.
+
+    `factors` maps each eligible matrix name (e.g. ``layer0.wq``,
+    ``shared_attn@0.wo``, ``layer1.expert3.down``) to its compressed leaf
+    dict — ``{"w1","w2"}`` low-rank factors or ``{"u8","v8","tail","su","sv"}``
+    remapped storage (Algorithm 3). Everything else the servable model needs
+    (embeddings, norms, routers) stays in the base params pytree and is
+    merged in by `apply`.
+    """
+
+    config: ModelConfig
+    report: CompressionReport
+    factors: dict[str, dict[str, jnp.ndarray]]
+    soft_ks: dict[str, float] | None = None   # trained continuous k's (Algorithm 1)
+    extra: dict[str, Any] = field(default_factory=dict)
+
+    # ---- views -------------------------------------------------------------
+    @property
+    def method(self) -> str:
+        return self.report.method
+
+    @property
+    def target_ratio(self) -> float:
+        return self.report.target_ratio
+
+    @property
+    def achieved_ratio(self) -> float:
+        return self.report.achieved_ratio
+
+    @property
+    def ks(self) -> dict[str, int]:
+        return self.report.ks
+
+    @property
+    def quantized(self) -> bool:
+        return self.report.quantize
+
+    def nbytes(self) -> int:
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(self.factors))
+
+    # ---- servable params ---------------------------------------------------
+    def apply(self, params: dict) -> dict:
+        """Swap the artifact's compressed leaves into a base params pytree,
+        returning servable params (restacked per template so scan-over-layers
+        still works). The base pytree supplies everything the artifact does
+        not carry (embeddings, norms, routers, conv/ssm state weights)."""
+        from repro.models import compression as mc
+        return mc.rebuild_params(params, self.config, self.factors,
+                                 self.report.ks, self.report.quantize)
+
+    # ---- persistence -------------------------------------------------------
+    def save(self, directory: str) -> str:
+        """Persist to `directory` (atomic: the factor checkpoint commits
+        first, then the manifest is written via tmp+rename — a reader never
+        observes a manifest without its factors)."""
+        os.makedirs(directory, exist_ok=True)
+        ckpt = Checkpointer(os.path.join(directory, _FACTORS_SUBDIR), keep=1)
+        ckpt.save(0, self.factors)
+
+        leaves = {
+            name: {leaf: {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+                   for leaf, arr in sorted(fdict.items())}
+            for name, fdict in sorted(self.factors.items())
+        }
+        manifest = {
+            "format_version": _FORMAT_VERSION,
+            "config": dataclasses.asdict(self.config),
+            "report": self.report.to_json(),
+            "soft_ks": ({k: float(v) for k, v in self.soft_ks.items()}
+                        if self.soft_ks is not None else None),
+            "extra": self.extra,
+            "leaves": leaves,
+        }
+        tmp = os.path.join(directory, _MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, os.path.join(directory, _MANIFEST))
+        return directory
+
+    @classmethod
+    def load(cls, directory: str, *, shardings: Any | None = None
+             ) -> "CompressionArtifact":
+        """Restore from `save`'s layout. `shardings` (optional pytree matching
+        the factors structure) device_puts each leaf onto the current mesh —
+        the checkpointer's reshard-on-restore path."""
+        path = os.path.join(directory, _MANIFEST)
+        if not os.path.exists(path):
+            raise FileNotFoundError(
+                f"no compression artifact at {directory!r} (missing {_MANIFEST})")
+        with open(path) as f:
+            manifest = json.load(f)
+        if manifest.get("format_version") != _FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported artifact format {manifest.get('format_version')!r}")
+
+        config = ModelConfig(**manifest["config"])
+        report = CompressionReport.from_json(manifest["report"])
+        like = {
+            name: {leaf: jax.ShapeDtypeStruct(tuple(ent["shape"]),
+                                              jnp.dtype(ent["dtype"]))
+                   for leaf, ent in fdict.items()}
+            for name, fdict in manifest["leaves"].items()
+        }
+        ckpt = Checkpointer(os.path.join(directory, _FACTORS_SUBDIR), keep=1)
+        step = ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"artifact at {directory!r} has no committed factor checkpoint")
+        factors = ckpt.restore(step, like, shardings=shardings)
+        soft_ks = manifest.get("soft_ks")
+        return cls(config=config, report=report, factors=factors,
+                   soft_ks=soft_ks, extra=manifest.get("extra", {}))
+
+
+def load_artifact(directory: str, *, shardings: Any | None = None
+                  ) -> CompressionArtifact:
+    """Module-level alias for `CompressionArtifact.load`."""
+    return CompressionArtifact.load(directory, shardings=shardings)
+
+
+def is_artifact_dir(directory: str) -> bool:
+    return os.path.exists(os.path.join(directory, _MANIFEST))

@@ -1,0 +1,104 @@
+"""`repro.compress` — the one-call compression facade.
+
+Subsumes the manual dance (train → rank-train → collect_calibration →
+compress_model_params → thread a (params, kmap) tuple around) with a single
+entry point that returns a `CompressionArtifact`:
+
+    art = repro.compress(cfg, params, ratio=0.4)                  # training-free
+    art = repro.compress(cfg, params, ratio=0.4, train=40)        # Algorithm 1 θ-training
+    art = repro.compress(cfg, params, ratio=0.4, method="plain")  # weight-SVD baseline
+
+The artifact carries the config reference, the unified CompressionReport,
+the factored/quantized leaves, and (when `train` > 0) the trained soft-k's —
+everything needed to `save()` once and serve many times.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.artifacts.artifact import CompressionArtifact
+from repro.configs.base import ModelConfig
+
+
+def _default_calib(cfg: ModelConfig, n: int, seq: int, seed: int):
+    """Random token batches — fine for smoke/demo runs; pass real `calib`
+    batches for quality numbers."""
+    return [jax.random.randint(jax.random.PRNGKey(seed + i), (2, seq),
+                               0, cfg.vocab_size) for i in range(n)]
+
+
+def compress(
+    cfg: ModelConfig,
+    params: dict | None = None,
+    *,
+    ratio: float,
+    method: str = "dobi",            # dobi | dobi_noremap | waterfill | plain
+    calib: Sequence[jnp.ndarray] | None = None,
+    calib_batches: int = 2,
+    calib_seq: int = 32,
+    train: int = 0,                  # Algorithm-1 θ-training steps (0 = off)
+    train_batch: int = 4,
+    train_seq: int = 32,
+    train_lr: float = 0.1,
+    svd_rank_cap: int | None = None,
+    data_cfg: Any | None = None,     # SyntheticConfig for θ-training batches
+    quantize: bool | None = None,
+    prefix_embeds: jnp.ndarray | None = None,
+    seed: int = 0,
+) -> CompressionArtifact:
+    """Calibrate/train → plan → update → (remap) → CompressionArtifact.
+
+    `params` defaults to a fresh `bundle.init(PRNGKey(seed))` (smoke/demo
+    path); pass trained params for real runs. `calib` is a list of (B, S)
+    int32 token batches (random ones are synthesized when omitted). With
+    `train` > 0 the per-matrix truncation positions θ are trained first
+    (paper Algorithm 1) and the rank plan comes from the trained soft-k's;
+    otherwise the training-free energy-waterfill plan is used.
+    """
+    from repro.models import build, compression as mc
+
+    bundle = build(cfg)
+    if params is None:
+        params = bundle.init(jax.random.PRNGKey(seed))
+    if calib is None:
+        calib = _default_calib(cfg, calib_batches, calib_seq, seed + 1000)
+
+    soft_ks = None
+    train_trace = None
+    if train and method not in ("dobi", "dobi_noremap"):
+        raise ValueError(
+            f"train={train} is incompatible with method={method!r}: only "
+            f"'dobi'/'dobi_noremap' plan ranks from trained soft-k's "
+            f"('waterfill' forces the training-free plan, 'plain' is the "
+            f"weight-SVD baseline)")
+    if train:
+        from repro.launch.rank_train import run as rank_train_run
+        rt_result = rank_train_run(
+            cfg, ratio=ratio, steps=int(train), batch=train_batch,
+            seq=train_seq, lr=train_lr, svd_rank_cap=svd_rank_cap,
+            seed=seed, remap=(method == "dobi"), params=params,
+            data_cfg=data_cfg)
+        soft_ks = rt_result.soft_ks
+        train_trace = rt_result.trace
+
+    factors, report = mc.compress_model_factors(
+        params, cfg, list(calib), ratio, method=method,
+        trained_soft_ks=soft_ks, quantize=quantize,
+        prefix_embeds=prefix_embeds)
+
+    report.provenance.update({
+        "train_steps": int(train),
+        "seed": int(seed),
+        "config_name": cfg.name,
+    })
+    if train_trace:
+        report.provenance["train_loss"] = [train_trace[0]["loss"],
+                                           train_trace[-1]["loss"]]
+        report.provenance["train_r_now"] = train_trace[-1]["r_now"]
+
+    return CompressionArtifact(config=cfg, report=report, factors=factors,
+                               soft_ks=soft_ks)

@@ -1,0 +1,80 @@
+"""The unified CompressionReport.
+
+Historically the flat-dict pipeline (`core/compress.py`) returned its own
+report dataclass while the model-level pipeline (`models/compression.py`)
+returned a bare `(params, kmap)` tuple and discarded everything else the
+paper's method produces (achieved ratio, per-matrix shapes, storage
+accounting, provenance). Both now produce THIS report; it is the single
+record of what a compression run did, and it rides inside every
+`CompressionArtifact` (artifacts/artifact.py).
+
+The report is JSON-serializable except for the optional `matrices` payload
+(per-matrix compressed factors, kept only by the in-memory flat-dict path).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+
+@dataclass
+class CompressionReport:
+    method: str                     # dobi | dobi_noremap | waterfill | plain | asvd | svd_llm
+    target_ratio: float
+    achieved_ratio: float
+    ks: dict[str, int]              # per-matrix integer ranks
+    shapes: dict[str, tuple[int, int]] = field(default_factory=dict)
+    quantize: bool = False          # remapped int8 storage (Algorithm 3)
+    total_params: int = 0           # dense element count over eligible matrices
+    stored_params: int = 0          # 16-bit-equivalent stored element count
+    provenance: dict[str, Any] = field(default_factory=dict)
+    # per-matrix CompressedMatrix payloads — only the flat-dict core pipeline
+    # fills this; model-level compression keeps factors in the artifact
+    matrices: dict[str, Any] = field(repr=False, default_factory=dict)
+
+    # ---- convenience -------------------------------------------------------
+    @property
+    def num_matrices(self) -> int:
+        return len(self.ks)
+
+    @property
+    def rank_range(self) -> tuple[int, int]:
+        if not self.ks:
+            return (0, 0)
+        return (min(self.ks.values()), max(self.ks.values()))
+
+    def summary(self) -> str:
+        lo, hi = self.rank_range
+        return (f"{self.method} @ target {self.target_ratio:.3f} → achieved "
+                f"{self.achieved_ratio:.3f} over {self.num_matrices} matrices "
+                f"(ranks {lo}..{hi}{', remapped int8' if self.quantize else ''})")
+
+    # ---- (de)serialization -------------------------------------------------
+    def to_json(self) -> dict:
+        """JSON-safe dict (drops the in-memory `matrices` payload)."""
+        return {
+            "method": self.method,
+            "target_ratio": float(self.target_ratio),
+            "achieved_ratio": float(self.achieved_ratio),
+            "ks": {k: int(v) for k, v in self.ks.items()},
+            "shapes": {k: [int(m), int(n)] for k, (m, n) in self.shapes.items()},
+            "quantize": bool(self.quantize),
+            "total_params": int(self.total_params),
+            "stored_params": int(self.stored_params),
+            "provenance": self.provenance,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "CompressionReport":
+        return cls(
+            method=d["method"],
+            target_ratio=float(d["target_ratio"]),
+            achieved_ratio=float(d["achieved_ratio"]),
+            ks={k: int(v) for k, v in d["ks"].items()},
+            shapes={k: (int(v[0]), int(v[1])) for k, v in d.get("shapes", {}).items()},
+            quantize=bool(d.get("quantize", False)),
+            total_params=int(d.get("total_params", 0)),
+            stored_params=int(d.get("stored_params", 0)),
+            provenance=dict(d.get("provenance", {})),
+        )

@@ -14,12 +14,13 @@ models/api.py provides the extraction for our transformer stack.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Mapping
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.artifacts.report import CompressionReport
 from repro.core import baselines as baselines_lib
 from repro.core import ipca as ipca_lib
 from repro.core import lowrank as lowrank_lib
@@ -51,14 +52,9 @@ class CompressedMatrix:
         return self.k * (m + n)
 
 
-@dataclass
-class CompressionReport:
-    method: str
-    target_ratio: float
-    achieved_ratio: float
-    ks: dict[str, int]
-    matrices: dict[str, CompressedMatrix] = field(repr=False, default_factory=dict)
-
+# The report type is the unified one shared with the model-level pipeline
+# and the artifact subsystem (artifacts/report.py); this pipeline fills its
+# `matrices` payload with CompressedMatrix objects.
 
 def _specs(weights: Mapping[str, jnp.ndarray]) -> list[planner_lib.MatrixSpec]:
     return [planner_lib.MatrixSpec(nm, int(w.shape[0]), int(w.shape[1])) for nm, w in weights.items()]
@@ -164,5 +160,10 @@ def compress(
         target_ratio=target_ratio,
         achieved_ratio=used / total,
         ks=kmap,
+        shapes={s.name: (s.m, s.n) for s in specs},
+        quantize=bool(quantize),
+        total_params=total,
+        stored_params=used,
+        provenance={"pipeline": "core.compress", "accounting": "stored_params"},
         matrices=out,
     )

@@ -7,16 +7,22 @@ after vs the uniform-k baseline.
 
   PYTHONPATH=src python -m repro.launch.rank_train --arch olmo-1b --smoke \
       --ratio 0.5 --steps 40
+
+`run()` returns a structured `RankTrainResult` (per-matrix soft-k's, trace,
+the trained θ, and the params/bundle it ran against). The pre-artifact
+positional 4-tuple unpack still works via a deprecation shim.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import warnings
+from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_config, parse_overrides
 from repro.core import rank_training as rt
@@ -24,14 +30,53 @@ from repro.data import SyntheticConfig, sample_batch
 from repro.models import build
 from repro.models.compression import (
     build_rank_train_loss,
-    compress_model_params,
     eligible_matrix_shapes,
 )
 
 
+@dataclass
+class RankTrainResult:
+    """Structured output of a rank-training run (launcher level).
+
+    Wraps `core.rank_training.RankTrainResult` (the raw θ/soft-k arrays +
+    trace) with the name-keyed views and run context that downstream
+    consumers — `repro.compress(..., train=N)`, examples, benchmarks — need.
+    """
+
+    core: rt.RankTrainResult            # thetas, soft_ks (array), trace
+    soft_ks: dict[str, float]           # name → trained continuous k
+    names: list[str]                    # eligible matrices, sorted
+    shapes: dict[str, tuple[int, int]]  # name → (m, n)
+    params: Any                         # the (frozen) params trained against
+    bundle: Any                         # the ModelBundle for those params
+    config: rt.RankTrainConfig | None = None
+
+    @property
+    def thetas(self) -> jnp.ndarray:
+        return self.core.thetas
+
+    @property
+    def trace(self) -> list[dict]:
+        return self.core.trace
+
+    @property
+    def final_ratio(self) -> float:
+        return self.core.trace[-1]["r_now"] if self.core.trace else float("nan")
+
+    def __iter__(self):
+        # Legacy shim: `result, soft_ks, params, bundle = run(...)` — the
+        # pre-artifact positional 4-tuple. New code should use attributes.
+        warnings.warn(
+            "unpacking rank_train.run() as a 4-tuple is deprecated; use the "
+            "RankTrainResult attributes (.core/.soft_ks/.params/.bundle)",
+            DeprecationWarning, stacklevel=2)
+        yield from (self.core, self.soft_ks, self.params, self.bundle)
+
+
 def run(cfg, *, ratio: float, steps: int, batch: int = 4, seq: int = 32,
         lr: float = 0.1, svd_rank_cap: int | None = None, seed: int = 0,
-        remap: bool = True, params=None, data_cfg: SyntheticConfig | None = None):
+        remap: bool = True, params=None, data_cfg: SyntheticConfig | None = None
+        ) -> RankTrainResult:
     bundle = build(cfg)
     if params is None:
         params = bundle.init(jax.random.PRNGKey(seed))
@@ -55,9 +100,16 @@ def run(cfg, *, ratio: float, steps: int, batch: int = 4, seq: int = 32,
             step += 1
 
     cfg_rt = rt.RankTrainConfig(target_ratio=ratio, steps=steps, lr=lr, remap=remap)
-    result = rt.train_ranks(loss_fn, theta0, shapes, batches(), cfg_rt)
-    soft_ks = dict(zip(names, result.soft_ks.tolist()))
-    return result, soft_ks, params, bundle
+    core_result = rt.train_ranks(loss_fn, theta0, shapes, batches(), cfg_rt)
+    return RankTrainResult(
+        core=core_result,
+        soft_ks=dict(zip(names, core_result.soft_ks.tolist())),
+        names=names,
+        shapes={nm: tuple(shapes_map[nm]) for nm in names},
+        params=params,
+        bundle=bundle,
+        config=cfg_rt,
+    )
 
 
 def main(argv=None):
@@ -76,15 +128,15 @@ def main(argv=None):
     if args.set:
         cfg = parse_overrides(cfg, args.set)
 
-    result, soft_ks, params, bundle = run(
-        cfg, ratio=args.ratio, steps=args.steps, batch=args.batch, seq=args.seq)
+    result = run(cfg, ratio=args.ratio, steps=args.steps, batch=args.batch,
+                 seq=args.seq)
     first, last = result.trace[0], result.trace[-1]
     print(f"[rank-train] loss {first['loss']:.4f} → {last['loss']:.4f}; "
           f"R_now {last['r_now']:.3f} (target {args.ratio})")
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"trace": result.trace, "soft_ks": soft_ks}, f)
+            json.dump({"trace": result.trace, "soft_ks": result.soft_ks}, f)
     return result
 
 

@@ -6,6 +6,14 @@ Host-scale demo (examples/compress_and_serve.py drives this):
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
       --batch 4 --prompt-len 32 --gen-len 16 [--ratio 0.4] [--loop-mode step]
 
+Compress-once / serve-many via artifacts (docs/api.md):
+
+  # compress in-process AND persist the artifact
+  ... serve --arch olmo-1b --smoke --ratio 0.4 --save-artifact /tmp/art
+  # later: load → serve, zero recompression (no IPCA/rank-train on this path),
+  # tokens bitwise-identical to the in-process run above
+  ... serve --artifact /tmp/art --smoke
+
 Three decode loops over the same model code (docs/serving.md compares them):
 
   * fused (default) — the whole decode loop is ONE compiled `lax.scan` with
@@ -35,13 +43,14 @@ from __future__ import annotations
 import argparse
 import functools
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
 
+from repro import artifacts
 from repro.configs import get_config, smoke_config, parse_overrides
 from repro.models import build
-from repro.models.compression import compress_model_params
 from repro.models.generate import live_token_counts, select_token, freeze_finished
 
 import numpy as np
@@ -98,14 +107,15 @@ def _generate_stepwise(bundle, params, prompt, gen_len, *, eos_id, cache_dtype,
     }
 
 
-def generate(
+def generate_tokens(
     bundle, params, prompt: jnp.ndarray, gen_len: int,
     *, eos_id: int | None = None, cache_dtype=jnp.bfloat16,
     loop_mode: str = "fused", temperature: float = 0.0, rng=None,
     max_len: int | None = None,
 ):
     """Greedy/sampled decode. prompt: (B, S). Returns (tokens (B, gen_len),
-    stats). `loop_mode` = "fused" (single-dispatch scan engine) | "step".
+    stats). `loop_mode` = "fused" (routes through `ModelBundle.generate`, the
+    single-dispatch scan engine) | "step" (per-token reference loop).
     `max_len` sizes the preallocated KV cache (a server sizes it for the
     longest request it accepts, not for this one)."""
     if loop_mode == "fused":
@@ -117,6 +127,16 @@ def generate(
     return _generate_stepwise(bundle, params, prompt, gen_len, eos_id=eos_id,
                               cache_dtype=cache_dtype, temperature=temperature,
                               rng=rng, max_len=max_len)
+
+
+def generate(*args, **kwargs):
+    """Deprecated: this free function shadowed `ModelBundle.generate`. Use
+    `generate_tokens` (same signature) or the bundle method directly."""
+    warnings.warn(
+        "repro.launch.serve.generate is deprecated (it shadowed "
+        "ModelBundle.generate); use generate_tokens instead",
+        DeprecationWarning, stacklevel=2)
+    return generate_tokens(*args, **kwargs)
 
 
 def run_traffic(bundle, params, args, cfg):
@@ -162,12 +182,26 @@ def run_traffic(bundle, params, args, cfg):
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture name (omit when --artifact supplies it)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--ratio", type=float, default=0.0, help="Dobi-SVD compression ratio")
+    ap.add_argument("--method", default=None,
+                    choices=("dobi", "dobi_noremap", "waterfill", "plain"),
+                    help="--ratio compression method (default dobi_noremap)")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="serve a saved CompressionArtifact: load → apply → "
+                         "serve, zero recompression")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="with --ratio: persist the compression artifact")
+    ap.add_argument("--base-params", default=None, metavar="DIR",
+                    help="Checkpointer directory holding the base "
+                         "(uncompressed) params pytree; default is a fresh "
+                         "init(PRNGKey(0)) — fine for smoke runs, pass the "
+                         "trained checkpoint for real weights")
     ap.add_argument("--loop-mode", choices=("fused", "step"), default="fused")
     ap.add_argument("--eos-id", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -187,28 +221,69 @@ def main(argv=None):
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
-    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.set:
-        cfg = parse_overrides(cfg, args.set)
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    if args.artifact is None and args.arch is None:
+        ap.error("one of --arch or --artifact is required")
+    if args.save_artifact and args.ratio <= 0:
+        ap.error("--save-artifact requires --ratio > 0")
+    if args.artifact is not None and (args.ratio > 0 or args.method is not None
+                                      or args.save_artifact):
+        ap.error("--artifact serves the saved compression as-is; "
+                 "--ratio/--method/--save-artifact cannot be combined with it")
 
-    if args.ratio > 0:
-        calib = [jax.random.randint(jax.random.PRNGKey(i), (2, args.prompt_len),
-                                    0, cfg.vocab_size) for i in range(2)]
-        params, kmap = compress_model_params(
-            params, cfg, calib, args.ratio, method="dobi_noremap", quantize=False)
-        print(f"[serve] compressed to ratio {args.ratio}: "
-              f"ranks {min(kmap.values())}..{max(kmap.values())}")
+    def base_params(bundle):
+        """The base (uncompressed) pytree the compressed leaves merge into."""
+        if args.base_params is None:
+            return bundle.init(jax.random.PRNGKey(0))
+        from repro.checkpoint import Checkpointer
+        ckpt = Checkpointer(args.base_params)
+        step = ckpt.latest_step()
+        if step is None:
+            ap.error(f"--base-params {args.base_params}: no committed checkpoint")
+        print(f"[serve] base params from {args.base_params} (step {step})")
+        return ckpt.restore(step, bundle.param_specs())
+
+    if args.artifact is not None:
+        # load → apply → serve: no IPCA / rank-train / SVD on this path
+        art = artifacts.load_artifact(args.artifact)
+        cfg = art.config
+        if args.set:
+            cfg = parse_overrides(cfg, args.set)
+            if cfg != art.config:
+                ap.error("--set cannot override an artifact's model config")
+        bundle = build(cfg)
+        params = bundle.with_artifact(art, base_params(bundle))
+        print(f"[serve] artifact {args.artifact}: {art.report.summary()}")
+        if args.base_params is None:
+            print("[serve]   base (uncompressed) leaves from init(PRNGKey(0)) "
+                  "— pass --base-params for trained weights")
+    else:
+        cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+        if args.set:
+            cfg = parse_overrides(cfg, args.set)
+        bundle = build(cfg)
+        params = base_params(bundle)
+
+        if args.ratio > 0:
+            calib = [jax.random.randint(jax.random.PRNGKey(i), (2, args.prompt_len),
+                                        0, cfg.vocab_size) for i in range(2)]
+            art = artifacts.compress(cfg, params, ratio=args.ratio,
+                                     method=args.method or "dobi_noremap",
+                                     calib=calib)
+            params = art.apply(params)
+            print(f"[serve] compressed: {art.report.summary()}")
+            if args.save_artifact:
+                art.save(args.save_artifact)
+                print(f"[serve] artifact saved to {args.save_artifact} "
+                      f"({art.nbytes()/2**20:.2f} MiB of factors)")
 
     if args.traffic > 0:
         return run_traffic(bundle, params, args, cfg)
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)
-    toks, stats = generate(bundle, params, prompt, args.gen_len,
-                           eos_id=args.eos_id, cache_dtype=jnp.dtype(cfg.dtype),
-                           loop_mode=args.loop_mode, temperature=args.temperature)
+    toks, stats = generate_tokens(bundle, params, prompt, args.gen_len,
+                                  eos_id=args.eos_id, cache_dtype=jnp.dtype(cfg.dtype),
+                                  loop_mode=args.loop_mode, temperature=args.temperature)
     print(f"[serve] {stats['loop_mode']}: prefill {stats['prefill_s']*1e3:.1f} ms, "
           f"decode {stats['decode_tok_per_s']:.1f} tok/s "
           f"({stats['live_tokens']} live tokens)")

@@ -55,6 +55,22 @@ class ModelBundle:
             params, batch, gen_len, cache_dtype=cache_dtype, max_len=max_len,
             temperature=temperature, rng=rng)
 
+    # ---- compression artifacts --------------------------------------------
+    def with_artifact(self, artifact, params=None, *, rng=None):
+        """Servable params from a `CompressionArtifact`: swap its compressed
+        leaves into `params` (a fresh `init(rng)` when omitted). No IPCA /
+        rank-train / SVD work happens here — the artifact already carries the
+        factored or remapped leaves; this is the compress-once/serve-many
+        load path (docs/api.md)."""
+        if artifact.config != self.cfg:
+            raise ValueError(
+                f"artifact was built for config {artifact.config.name!r} "
+                f"(d_model={artifact.config.d_model}), bundle is "
+                f"{self.cfg.name!r} (d_model={self.cfg.d_model})")
+        if params is None:
+            params = self.init(rng if rng is not None else jax.random.PRNGKey(0))
+        return artifact.apply(params)
+
     # ---- dry-run specs ----------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
         cfg = self.cfg

@@ -7,10 +7,15 @@ Three entry points:
     eligible linear (tests assert the mirrored forward equals the scanned
     forward bit-for-bit at fp32);
 
-  * `compress_model_params` — the full paper pipeline on a model pytree:
+  * `compress_model_factors` — the full paper pipeline on a model pytree:
     IPCA activation bases → rank plan (trained-k or energy waterfill) →
     W̃ = W V_k V_kᵀ → factored ({"w1","w2"}) or remapped ({"u8",...}) leaves,
-    ranks zero-padded per stack so scan still works;
+    returned per matrix together with the unified CompressionReport
+    (artifacts/report.py). `rebuild_params` swaps those leaves into a base
+    params pytree, ranks zero-padded per stack so scan still works;
+    `compress_model_params` is the legacy two-step wrapper returning
+    (params, kmap) — the canonical surface is `repro.compress`, which wraps
+    the factors + report in a CompressionArtifact;
 
   * `build_rank_train_loss` — the differentiable-truncation training loss
     (paper Algorithm 1): every eligible linear computes A = xW, soft-truncates
@@ -33,7 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.artifacts.report import CompressionReport
 from repro.configs.base import ModelConfig
+from repro.core import baselines as baselines_lib
 from repro.core import svd_module as svd_lib
 from repro.core import ipca as ipca_lib
 from repro.core import lowrank as lowrank_lib
@@ -316,21 +323,68 @@ def _find_weight(params: dict, cfg: ModelConfig, name: str):
 # Whole-model compression
 # ---------------------------------------------------------------------------
 
-def compress_model_params(
+_MODEL_METHODS = ("dobi", "dobi_noremap", "waterfill", "plain")
+
+
+def compress_model_factors(
     params: dict,
     cfg: ModelConfig,
     token_batches: list[jnp.ndarray],
     target_ratio: float,
     *,
-    method: str = "dobi",            # dobi | dobi_noremap
+    method: str = "dobi",            # dobi | dobi_noremap | waterfill | plain
     trained_soft_ks: dict[str, float] | None = None,
     quantize: bool | None = None,
     prefix_embeds: jnp.ndarray | None = None,
-) -> tuple[dict, dict[str, int]]:
-    """Returns (new params pytree with factored/remapped leaves, rank map)."""
+) -> tuple[dict[str, dict[str, jnp.ndarray]], CompressionReport]:
+    """Compress every eligible matrix; returns (factors, unified report).
+
+    `factors` maps matrix name → compressed leaf dict ({"w1","w2"} or the
+    remapped {"u8","v8","tail","su","sv"}); `rebuild_params` swaps them into
+    a base pytree, and artifacts/ persists them. Methods:
+
+      * dobi          — remapped-bijection rank plan (trained soft-k's if
+                        given, else energy waterfill) + Algorithm-3 storage;
+      * dobi_noremap  — same plan under classic k(m+n) accounting, factored
+                        bf16/fp32 leaves;
+      * waterfill     — dobi_noremap with the training-free energy-waterfill
+                        plan forced (trained_soft_ks ignored);
+      * plain         — weight-SVD truncation at a uniform ratio (baseline;
+                        needs no calibration batches).
+    """
+    if method not in _MODEL_METHODS:
+        raise ValueError(f"unknown method {method!r}; expected one of {_MODEL_METHODS}")
+    if method == "plain" and quantize:
+        raise ValueError("method='plain' is the unquantized weight-SVD "
+                         "baseline; quantize=True is not supported for it")
     remap = method == "dobi"
     if quantize is None:
         quantize = remap and cfg.compress_quant
+
+    provenance: dict[str, Any] = {
+        "calib_batches": len(token_batches),
+        "trained": trained_soft_ks is not None and method in ("dobi", "dobi_noremap"),
+        "accounting": "remap" if remap else "factored",
+    }
+
+    if method == "plain":
+        shapes_map = eligible_matrix_shapes(params, cfg)
+        names = sorted(shapes_map)
+        specs = [planner_lib.MatrixSpec(nm, *shapes_map[nm]) for nm in names]
+        ks = planner_lib.plan_uniform(specs, target_ratio, remap=False)
+        kmap = dict(zip(names, ks))
+        factors: dict[str, Any] = {}
+        for nm in names:
+            w = _find_weight(params, cfg, nm)
+            k = max(1, kmap[nm])
+            kmap[nm] = k
+            dense = baselines_lib.svd_weight_truncate(w, k)
+            f = lowrank_lib.lowrank_from_dense(dense, k)
+            factors[nm] = {"w1": f.w1, "w2": f.w2}
+        return factors, _make_report(method, target_ratio, specs, kmap,
+                                     remap=False, quantize=False,
+                                     provenance=provenance)
+
     # pass 1: spectra only (cheap) → integer rank plan
     spec_records = collect_calibration(
         params, cfg, token_batches, spectra_only=True, prefix_embeds=prefix_embeds)
@@ -340,7 +394,7 @@ def compress_model_params(
                                int(spec_records[nm].weight.shape[1]))
         for nm in names
     ]
-    if trained_soft_ks is not None:
+    if trained_soft_ks is not None and method != "waterfill":
         ks = planner_lib.plan_from_trained_k(
             specs, [trained_soft_ks[nm] for nm in names], target_ratio, remap=remap
         )
@@ -354,7 +408,7 @@ def compress_model_params(
         params, cfg, token_batches, max_rank=kmap, prefix_embeds=prefix_embeds)
 
     # per-matrix factors
-    factors: dict[str, Any] = {}
+    factors = {}
     for nm in names:
         rec = records[nm]
         k = kmap[nm]
@@ -369,8 +423,46 @@ def compress_model_params(
             f = lowrank_lib.lowrank_from_basis(rec.weight, v_k)
             factors[nm] = {"w1": f.w1, "w2": f.w2}
 
-    new_params = _rebuild_params(params, cfg, factors, kmap, quantize)
-    return new_params, kmap
+    return factors, _make_report(method, target_ratio, specs, kmap,
+                                 remap=remap, quantize=quantize,
+                                 provenance=provenance)
+
+
+def _make_report(method, target_ratio, specs, kmap, *, remap, quantize,
+                 provenance) -> CompressionReport:
+    """Planner-accounted storage: stored = Σ k·cost_per_rank (k·max(m,n)
+    16-bit slots under remap, k·(m+n) factored) — the paper's ratio
+    definition, matching core/planner.achieved_ratio."""
+    total = sum(s.params for s in specs)
+    stored = sum(kmap[s.name] * s.cost_per_rank(remap) for s in specs)
+    return CompressionReport(
+        method=method, target_ratio=target_ratio,
+        achieved_ratio=stored / max(total, 1), ks=dict(kmap),
+        shapes={s.name: (s.m, s.n) for s in specs},
+        quantize=quantize, total_params=total, stored_params=stored,
+        provenance=provenance)
+
+
+def compress_model_params(
+    params: dict,
+    cfg: ModelConfig,
+    token_batches: list[jnp.ndarray],
+    target_ratio: float,
+    *,
+    method: str = "dobi",            # dobi | dobi_noremap | waterfill | plain
+    trained_soft_ks: dict[str, float] | None = None,
+    quantize: bool | None = None,
+    prefix_embeds: jnp.ndarray | None = None,
+) -> tuple[dict, dict[str, int]]:
+    """Legacy surface: returns (new params pytree, rank map), discarding the
+    report. Prefer `repro.compress(...)` → CompressionArtifact, which keeps
+    the report + factors and can be saved/loaded/served."""
+    factors, report = compress_model_factors(
+        params, cfg, token_batches, target_ratio, method=method,
+        trained_soft_ks=trained_soft_ks, quantize=quantize,
+        prefix_embeds=prefix_embeds)
+    new_params = rebuild_params(params, cfg, factors, report.ks, report.quantize)
+    return new_params, dict(report.ks)
 
 
 def _pad_rank(arr: jnp.ndarray, axis: int, k_pad: int) -> jnp.ndarray:
@@ -382,8 +474,12 @@ def _pad_rank(arr: jnp.ndarray, axis: int, k_pad: int) -> jnp.ndarray:
     return jnp.pad(arr, widths)
 
 
-def _rebuild_params(params, cfg, factors, kmap, quantize):
-    """Swap dense leaves for factored dicts, restacking per template."""
+def rebuild_params(params, cfg, factors, kmap=None, quantize=None):
+    """Swap dense leaves for factored dicts, restacking per template.
+
+    `kmap`/`quantize` are accepted for signature stability (the leaf dicts
+    are self-describing — {"w1","w2"} vs {"u8",...} — so the rebuild only
+    needs `factors`). This is what `CompressionArtifact.apply` calls."""
     leaf_sets = {
         "dense": ["wq", "wk", "wv", "wo", "gate", "up", "down"],
         "moe": ["wq", "wk", "wv", "wo"],
@@ -483,6 +579,9 @@ def _rebuild_params(params, cfg, factors, kmap, quantize):
                 params["shared_attn"], "shared_attn@0", "dense"
             )
     return new_params
+
+
+_rebuild_params = rebuild_params  # pre-artifact private name (tests import it)
 
 
 # ---------------------------------------------------------------------------

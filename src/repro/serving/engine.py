@@ -119,6 +119,28 @@ class ContinuousEngine:
         self._scratch = None    # recycled batch-1 admission cache, see _admit
         self.chunks_run = 0
 
+    @classmethod
+    def from_artifact(cls, artifact, *, params=None, rng=None, **engine_kw
+                      ) -> "ContinuousEngine":
+        """Build an engine straight from a `CompressionArtifact` (or a saved
+        artifact directory): the bundle comes from the artifact's config and
+        the servable params from `bundle.with_artifact` — compress once,
+        serve many times with zero recompression on this path. `params`
+        supplies the base (uncompressed) leaves the artifact doesn't carry;
+        omitted, a fresh `init(rng)` is used. Remaining kwargs are the
+        `ContinuousEngine(...)` arguments (num_slots, max_len, chunk, …)."""
+        import os
+        from repro.artifacts import CompressionArtifact, load_artifact
+        from repro.models import build
+        if isinstance(artifact, (str, os.PathLike)):
+            artifact = load_artifact(os.fspath(artifact))
+        if not isinstance(artifact, CompressionArtifact):
+            raise TypeError(f"expected CompressionArtifact or path, got "
+                            f"{type(artifact).__name__}")
+        bundle = build(artifact.config)
+        servable = bundle.with_artifact(artifact, params, rng=rng)
+        return cls(bundle, servable, **engine_kw)
+
     def reset(self, clock) -> None:
         """Forget completed requests and restart the clock for another run.
         The pool cache, compiled callables, and scratch buffer are kept, so a

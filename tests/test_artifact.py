@@ -1,0 +1,188 @@
+"""CompressionArtifact: compress → save → load → serve must be
+token-identical to serving the in-memory artifact, across the three decoder
+templates (uniform / gemma / zamba), including a quantized (remap=True)
+artifact whose packed buffers survive the checkpoint with dtypes intact.
+Also pins the facade surface (`repro.compress`), the unified report, the
+ContinuousEngine artifact path, and the legacy-entry-point shims."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.artifacts import CompressionArtifact, CompressionReport, load_artifact
+from repro.configs import smoke_config
+from repro.models import build
+
+TEMPLATES = ["olmo-1b", "gemma3-4b", "zamba2-2.7b"]   # uniform / gemma / zamba
+
+
+def _setup(arch):
+    cfg = smoke_config(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0, cfg.vocab_size)
+             for i in range(2)]
+    return cfg, bundle, params, calib
+
+
+def _assert_factors_bitwise_equal(fa, fb):
+    for nm, fd in fa.items():
+        for leaf, arr in fd.items():
+            a, b = np.asarray(arr), np.asarray(fb[nm][leaf])
+            assert a.dtype == b.dtype, (nm, leaf, a.dtype, b.dtype)
+            assert a.shape == b.shape, (nm, leaf)
+            np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8),
+                                          err_msg=f"{nm}.{leaf} not bitwise equal")
+
+
+@pytest.mark.parametrize("arch", TEMPLATES)
+def test_artifact_roundtrip_serve_token_identical(tmp_path, arch):
+    cfg, bundle, params, calib = _setup(arch)
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    toks_mem, _ = bundle.generate(bundle.with_artifact(art, params), prompt, 8,
+                                  cache_dtype=jnp.float32)
+
+    art.save(str(tmp_path / "art"))
+    art2 = load_artifact(str(tmp_path / "art"))
+    assert art2.config == cfg
+    assert art2.report.ks == art.report.ks
+    assert art2.report.achieved_ratio == pytest.approx(art.report.achieved_ratio)
+    _assert_factors_bitwise_equal(art.factors, art2.factors)
+
+    toks_loaded, _ = bundle.generate(bundle.with_artifact(art2, params), prompt, 8,
+                                     cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(toks_mem), np.asarray(toks_loaded))
+
+
+def test_quantized_artifact_packed_dtypes_survive(tmp_path):
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi", quantize=True,
+                         calib=calib)
+    assert art.quantized and art.report.quantize
+    leaf_dtypes = {leaf: str(a.dtype)
+                   for fd in art.factors.values() for leaf, a in fd.items()}
+    assert leaf_dtypes["u8"] == "int8" and leaf_dtypes["v8"] == "int8"
+    assert leaf_dtypes["tail"] == "bfloat16"
+    assert leaf_dtypes["su"] == "float32" and leaf_dtypes["sv"] == "float32"
+
+    art.save(str(tmp_path / "q"))
+    art2 = load_artifact(str(tmp_path / "q"))
+    _assert_factors_bitwise_equal(art.factors, art2.factors)
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
+    t1, _ = bundle.generate(bundle.with_artifact(art, params), prompt, 6,
+                            cache_dtype=jnp.float32)
+    t2, _ = bundle.generate(bundle.with_artifact(art2, params), prompt, 6,
+                            cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_report_is_unified_and_json_roundtrips():
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.4, calib=calib)  # method=dobi default
+    rep = art.report
+    assert isinstance(rep, CompressionReport)
+    assert rep.method == "dobi"
+    assert 0 < rep.achieved_ratio <= rep.target_ratio + 1e-6
+    assert set(rep.ks) == set(rep.shapes)
+    assert rep.stored_params < rep.total_params
+    rt = CompressionReport.from_json(rep.to_json())
+    assert rt.ks == rep.ks and rt.shapes == rep.shapes
+    assert rt.achieved_ratio == pytest.approx(rep.achieved_ratio)
+
+    # the flat-dict core pipeline emits the SAME report type
+    from repro.core.compress import compress as core_compress
+    from repro.core.compress import CompressionReport as CoreReport
+    assert CoreReport is CompressionReport
+    w = {"m0": jnp.asarray(np.random.RandomState(0).randn(16, 24), jnp.float32)}
+    x = {"m0": jnp.asarray(np.random.RandomState(1).randn(2, 8, 16), jnp.float32)}
+    core_rep = core_compress(w, x, 0.5, method="plain")
+    assert isinstance(core_rep, CompressionReport)
+    assert core_rep.shapes["m0"] == (16, 24)
+
+
+def test_trained_artifact_carries_soft_ks():
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib, train=3, svd_rank_cap=16)
+    assert art.soft_ks is not None and len(art.soft_ks) == len(art.ks)
+    assert art.report.provenance["trained"] is True
+    assert art.report.provenance["train_steps"] == 3
+    assert all(np.isfinite(v) for v in art.soft_ks.values())
+
+
+def test_continuous_engine_from_artifact(tmp_path):
+    from repro.serving import ContinuousEngine, Request, VirtualClock
+
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+    art.save(str(tmp_path / "eng"))
+
+    def run_engine(source):
+        eng = ContinuousEngine.from_artifact(
+            source, params=params, num_slots=2, max_len=64, chunk=4,
+            cache_dtype=jnp.float32, clock=VirtualClock())
+        reqs = [Request(rid=i, prompt=list(range(3 + i, 11 + i)),
+                        max_new_tokens=6, arrival_time=0.0) for i in range(3)]
+        return {rid: toks.tolist() for rid, (toks, _) in eng.run(reqs).items()}
+
+    out_mem = run_engine(art)
+    out_disk = run_engine(tmp_path / "eng")   # os.PathLike accepted too
+    assert out_mem == out_disk
+
+
+def test_facade_rejects_train_with_trainless_method():
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    with pytest.raises(ValueError, match="incompatible"):
+        repro.compress(cfg, params, ratio=0.5, method="waterfill",
+                       calib=calib, train=5)
+
+
+def test_with_artifact_rejects_config_mismatch():
+    cfg, bundle, params, calib = _setup("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+    other = build(smoke_config("gemma3-4b"))
+    with pytest.raises(ValueError, match="artifact was built for"):
+        other.with_artifact(art)
+
+
+def test_legacy_entry_point_shims():
+    cfg, bundle, params, calib = _setup("olmo-1b")
+
+    # compress_model_params still returns the (params, kmap) tuple
+    from repro.models.compression import compress_model_params
+    cparams, kmap = compress_model_params(params, cfg, calib, 0.5,
+                                          method="dobi_noremap", quantize=False)
+    assert isinstance(kmap, dict) and len(kmap) > 0
+
+    # launch.serve.generate warns but still works
+    from repro.launch import serve as serve_mod
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    with pytest.warns(DeprecationWarning):
+        t_old, _ = serve_mod.generate(bundle, params, prompt, 4,
+                                      cache_dtype=jnp.float32)
+    t_new, _ = serve_mod.generate_tokens(bundle, params, prompt, 4,
+                                         cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(t_old), np.asarray(t_new))
+
+    # rank_train.run: structured result + legacy 4-tuple unpack shim
+    from repro.launch.rank_train import run as rank_train_run, RankTrainResult
+    res = rank_train_run(cfg, ratio=0.5, steps=2, batch=2, seq=12,
+                         svd_rank_cap=8, params=params)
+    assert isinstance(res, RankTrainResult)
+    assert set(res.soft_ks) == set(res.names)
+    with pytest.warns(DeprecationWarning):
+        core_res, soft_ks, p, b = res
+    assert soft_ks == res.soft_ks and p is params
+
+
+def test_load_missing_artifact_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_artifact(str(tmp_path / "nope"))

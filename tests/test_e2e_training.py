@@ -76,7 +76,7 @@ def test_checkpoint_restart_bit_exact():
 def test_compression_quality_ordering_on_trained_model():
     """After real training, higher ratios must degrade less (monotonicity) and
     activation-aware Dobi must beat plain weight SVD at ratio 0.5."""
-    from repro.models.compression import compress_model_params, collect_calibration, _rebuild_params
+    from repro.models.compression import compress_model_params, collect_calibration, rebuild_params
     from repro.core import baselines as B
     from repro.core import planner as P
     from repro.core.lowrank import lowrank_from_dense
@@ -120,6 +120,6 @@ def test_compression_quality_ordering_on_trained_model():
     for nm, k in zip(names, ks):
         f = lowrank_from_dense(B.svd_weight_truncate(records[nm].weight, k), k)
         factors[nm] = {"w1": f.w1, "w2": f.w2}
-    pw = _rebuild_params(params, cfg, factors, dict(zip(names, ks)), quantize=False)
+    pw = rebuild_params(params, cfg, factors, dict(zip(names, ks)), quantize=False)
     loss_plain = eval_loss(pw)
     assert loss_dobi_same < loss_plain, (loss_dobi_same, loss_plain)

@@ -8,16 +8,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config, ShapeConfig
-from repro.launch.serve import generate
+from repro.launch.serve import generate_tokens
 from repro.models import build
 from repro.models.compression import compress_model_params
 from repro.models.generate import live_token_counts
 
 
 def _both_modes(bundle, params, prompt, gen_len, **kw):
-    toks_f, stats_f = generate(bundle, params, prompt, gen_len,
+    toks_f, stats_f = generate_tokens(bundle, params, prompt, gen_len,
                                cache_dtype=jnp.float32, loop_mode="fused", **kw)
-    toks_s, stats_s = generate(bundle, params, prompt, gen_len,
+    toks_s, stats_s = generate_tokens(bundle, params, prompt, gen_len,
                                cache_dtype=jnp.float32, loop_mode="step", **kw)
     return (np.asarray(toks_f), stats_f), (np.asarray(toks_s), stats_s)
 
@@ -85,7 +85,7 @@ def test_eos_freezes_sequences_identically():
     bundle = build(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
-    free, _ = generate(bundle, params, prompt, 8, cache_dtype=jnp.float32)
+    free, _ = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
     eos = int(np.asarray(free)[0, 2])   # force an EOS hit mid-sequence
     (tf, sf), (ts, ss) = _both_modes(bundle, params, prompt, 8, eos_id=eos)
     np.testing.assert_array_equal(tf, ts)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
-from repro.launch.serve import generate
+from repro.launch.serve import generate_tokens
 from repro.models import build
 
 
@@ -14,8 +14,8 @@ def test_generate_greedy_deterministic():
     bundle = build(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
-    toks1, stats = generate(bundle, params, prompt, 8, cache_dtype=jnp.float32)
-    toks2, _ = generate(bundle, params, prompt, 8, cache_dtype=jnp.float32)
+    toks1, stats = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
+    toks2, _ = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
     np.testing.assert_array_equal(np.asarray(toks1), np.asarray(toks2))
     assert toks1.shape == (2, 8)
     assert stats["decode_tok_per_s"] > 0
@@ -28,7 +28,7 @@ def test_generate_matches_teacher_forced_argmax():
     bundle = build(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
     prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
-    toks, _ = generate(bundle, params, prompt, 4, cache_dtype=jnp.float32)
+    toks, _ = generate_tokens(bundle, params, prompt, 4, cache_dtype=jnp.float32)
     # teacher-forced re-check of the first generated token
     out = bundle.forward(params, {"tokens": prompt})
     logits = out[0] if isinstance(out, tuple) else out
