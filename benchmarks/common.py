@@ -28,6 +28,17 @@ from repro.models import build
 CACHE = os.path.join(os.path.dirname(__file__), ".cache")
 
 
+def compress_params(params, cfg, calib, ratio, **kw):
+    """Compressed servable params via the canonical factors→rebuild pipeline
+    (what every benchmark needs; the kmap/report live on `repro.compress`
+    artifacts for callers that want them — the deprecated
+    `compress_model_params` wrapper is test-only now)."""
+    from repro.models.compression import compress_model_factors, rebuild_params
+
+    factors, report = compress_model_factors(params, cfg, calib, ratio, **kw)
+    return rebuild_params(params, cfg, factors, report.ks, report.quantize)
+
+
 def proxy_config(**overrides) -> ModelConfig:
     kw = dict(
         name="llama-proxy", family="dense",

@@ -19,7 +19,7 @@ from benchmarks import common
 from repro.core import ipca as ipca_lib
 from repro.core import remap as remap_lib
 from repro.models.compression import (
-    collect_calibration, compress_model_params, eligible_matrix_shapes,
+    collect_calibration, eligible_matrix_shapes,
 )
 
 
@@ -59,10 +59,10 @@ def run_t16(ratios=(0.8, 0.6, 0.4), steps=40):
         )
         soft_ks = result.soft_ks
         traces[ratio] = result.trace
-        p_tr, _ = compress_model_params(
+        p_tr = common.compress_params(
             params, cfg, calib, ratio, method="dobi_noremap",
             trained_soft_ks=soft_ks, quantize=False)
-        p_un, _ = compress_model_params(
+        p_un = common.compress_params(
             params, cfg, calib, ratio, method="dobi_noremap", quantize=False,
             trained_soft_ks=None)  # energy-waterfill plan
         # pure-uniform plan (SVD-LLM style): same k-ratio everywhere
@@ -72,7 +72,7 @@ def run_t16(ratios=(0.8, 0.6, 0.4), steps=40):
         specs = [planner_lib.MatrixSpec(nm, *shapes_map[nm]) for nm in names]
         ks_uni = planner_lib.plan_uniform(specs, ratio, remap=False)
         soft_uni = {nm: float(k) for nm, k in zip(names, ks_uni)}
-        p_uni, _ = compress_model_params(
+        p_uni = common.compress_params(
             params, cfg, calib, ratio, method="dobi_noremap",
             trained_soft_ks=soft_uni, quantize=False)
         rows.append({
@@ -113,9 +113,9 @@ def run_t17(ratio=0.5, deltas=(0, 1, 2, 4, 8)):
             if j < len(ks):
                 ks[j] = max(1, ks[j] - d)
         soft = {nm: float(k) for nm, k in zip(names, ks)}
-        p, _ = compress_model_params(params, cfg, calib, ratio,
-                                     method="dobi_noremap",
-                                     trained_soft_ks=soft, quantize=False)
+        p = common.compress_params(params, cfg, calib, ratio,
+                                   method="dobi_noremap",
+                                   trained_soft_ks=soft, quantize=False)
         rows.append({"delta": d, "ppl": common.eval_ppl(cfg, p)})
     base = rows[0]["ppl"]
     for r in rows:

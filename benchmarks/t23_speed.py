@@ -25,7 +25,6 @@ import numpy as np
 from benchmarks import common
 from repro.launch.serve import generate_tokens
 from repro.models import build
-from repro.models.compression import compress_model_params
 from repro.roofline.hlo import param_count
 from repro.configs import get_config
 
@@ -52,8 +51,8 @@ def run_host_timing(gen_tokens: int = 8):
     for ratio in (None, 0.8, 0.6, 0.4):
         p = params
         if ratio is not None:
-            p, _ = compress_model_params(params, cfg, calib, ratio,
-                                         method="dobi_noremap", quantize=False)
+            p = common.compress_params(params, cfg, calib, ratio,
+                                       method="dobi_noremap", quantize=False)
         cache = bundle.init_cache(p, 2, max_len=64, dtype=jnp.float32)
         prompt = jnp.ones((2, 16), jnp.int32)
         _, cache = jax.block_until_ready(
@@ -95,8 +94,8 @@ def run_decode_loop_bench(gen_len: int = 64, batch: int = 1, prompt_len: int = 1
     for ratio in (None, 0.8, 0.6, 0.4):
         p = params
         if ratio is not None:
-            p, _ = compress_model_params(params, cfg, calib, ratio,
-                                         method="dobi_noremap", quantize=False)
+            p = common.compress_params(params, cfg, calib, ratio,
+                                       method="dobi_noremap", quantize=False)
         toks = {}
         for mode in ("step", "fused"):   # compile both before timing
             toks[mode], _ = generate_tokens(bundle, p, prompt, gen_len, max_len=max_len,

@@ -32,7 +32,6 @@ import numpy as np
 
 from benchmarks import common
 from repro.models import build
-from repro.models.compression import compress_model_params
 from repro.serving import ContinuousEngine, VirtualClock, poisson_trace
 from repro.serving.engine import summarize
 
@@ -159,8 +158,8 @@ def run_bench(*, n_requests=24, num_slots=4, chunk=8, arrival_rate=60.0,
     for ratio in (None, 0.4):
         p = params
         if ratio is not None:
-            p, _ = compress_model_params(params, cfg, calib, ratio,
-                                         method="dobi_noremap", quantize=False)
+            p = common.compress_params(params, cfg, calib, ratio,
+                                       method="dobi_noremap", quantize=False)
         row = bench_one(bundle, p, trace, num_slots=num_slots, max_len=max_len,
                         chunk=chunk, cache_dtype=jnp.float32)
         row["ratio"] = ratio or 1.0

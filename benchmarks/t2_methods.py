@@ -12,7 +12,6 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.models.compression import compress_model_params
 
 
 METHODS = ("dobi", "dobi_noremap", "svd_llm", "asvd", "plain")
@@ -31,7 +30,7 @@ def _trained_ks(cfg, params, ratio, remap):
 def _compress_eval(cfg, params, calib, ratio, method):
     if method in ("dobi", "dobi_noremap"):
         soft_ks = _trained_ks(cfg, params, ratio, remap=(method == "dobi"))
-        cparams, _ = compress_model_params(
+        cparams = common.compress_params(
             params, cfg, calib, ratio, method=method,
             trained_soft_ks=soft_ks, quantize=(method == "dobi"))
         return common.eval_ppl(cfg, cparams)

@@ -7,7 +7,6 @@ most dramatically at low ratios.
 from __future__ import annotations
 
 from benchmarks import common
-from repro.models.compression import compress_model_params
 
 
 def run(ratios=(0.8, 0.6, 0.4)):
@@ -16,14 +15,14 @@ def run(ratios=(0.8, 0.6, 0.4)):
     rows = []
     for ratio in ratios:
         # Remap(16bit): bijective k budget, factors kept bf16/f32 (quantize off)
-        p16, _ = compress_model_params(params, cfg, calib, ratio,
-                                       method="dobi", quantize=False)
+        p16 = common.compress_params(params, cfg, calib, ratio,
+                                     method="dobi", quantize=False)
         # Remap(8+16bit): Algorithm 3 storage (int8 packed regions)
-        p816, _ = compress_model_params(params, cfg, calib, ratio,
-                                        method="dobi", quantize=True)
+        p816 = common.compress_params(params, cfg, calib, ratio,
+                                      method="dobi", quantize=True)
         # W/o remap: classic k(m+n) budget at the same ratio
-        pno, _ = compress_model_params(params, cfg, calib, ratio,
-                                       method="dobi_noremap", quantize=False)
+        pno = common.compress_params(params, cfg, calib, ratio,
+                                     method="dobi_noremap", quantize=False)
         rows.append({
             "ratio": ratio,
             "remap_16bit": common.eval_ppl(cfg, p16),

@@ -88,14 +88,24 @@ class CompressionArtifact:
                    for x in jax.tree.leaves(self.factors))
 
     # ---- servable params ---------------------------------------------------
-    def apply(self, params: dict) -> dict:
+    def apply(self, params: dict, *, mesh=None) -> dict:
         """Swap the artifact's compressed leaves into a base params pytree,
         returning servable params (restacked per template so scan-over-layers
         still works). The base pytree supplies everything the artifact does
-        not carry (embeddings, norms, routers, conv/ssm state weights)."""
+        not carry (embeddings, norms, routers, conv/ssm state weights).
+
+        With a `mesh`, the rebuilt pytree is placed under the serving param
+        rules (parallel/sharding.py: TP over "model", replicated over the
+        data axes) so the engine never sees host-resident leaves. Pair with
+        `load(dir, mesh=...)` to keep the factors themselves off the host:
+        restore device_puts each leaf straight onto its mesh sharding."""
         from repro.models import compression as mc
-        return mc.rebuild_params(params, self.config, self.factors,
-                                 self.report.ks, self.report.quantize)
+        servable = mc.rebuild_params(params, self.config, self.factors,
+                                     self.report.ks, self.report.quantize)
+        if mesh is not None:
+            from repro.parallel import sharding as shardlib
+            servable = shardlib.place_params(mesh, servable)
+        return servable
 
     # ---- persistence -------------------------------------------------------
     def save(self, directory: str) -> str:
@@ -129,11 +139,14 @@ class CompressionArtifact:
         return directory
 
     @classmethod
-    def load(cls, directory: str, *, shardings: Any | None = None
+    def load(cls, directory: str, *, shardings: Any | None = None, mesh=None
              ) -> "CompressionArtifact":
         """Restore from `save`'s layout. `shardings` (optional pytree matching
         the factors structure) device_puts each leaf onto the current mesh —
-        the checkpointer's reshard-on-restore path."""
+        the checkpointer's reshard-on-restore path. `mesh` is the convenience
+        form: factor shardings are derived from the matrix names
+        (parallel/sharding.py:factor_specs), so each leaf lands on its TP
+        shard straight from disk with no host-resident full copy."""
         path = os.path.join(directory, _MANIFEST)
         if not os.path.exists(path):
             raise FileNotFoundError(
@@ -157,16 +170,21 @@ class CompressionArtifact:
         if step is None:
             raise FileNotFoundError(
                 f"artifact at {directory!r} has no committed factor checkpoint")
+        if mesh is not None:
+            if shardings is not None:
+                raise ValueError("pass either mesh or shardings, not both")
+            from repro.parallel import sharding as shardlib
+            shardings = shardlib.make_sharding(mesh, shardlib.factor_specs(like))
         factors = ckpt.restore(step, like, shardings=shardings)
         soft_ks = manifest.get("soft_ks")
         return cls(config=config, report=report, factors=factors,
                    soft_ks=soft_ks, extra=manifest.get("extra", {}))
 
 
-def load_artifact(directory: str, *, shardings: Any | None = None
+def load_artifact(directory: str, *, shardings: Any | None = None, mesh=None
                   ) -> CompressionArtifact:
     """Module-level alias for `CompressionArtifact.load`."""
-    return CompressionArtifact.load(directory, shardings=shardings)
+    return CompressionArtifact.load(directory, shardings=shardings, mesh=mesh)
 
 
 def is_artifact_dir(directory: str) -> bool:

@@ -11,20 +11,46 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # axis_types landed after jax 0.4.37; Auto is the default either way, so
+    # pass it only where the API knows the kwarg — one helper works on every
+    # jax this repo meets (CI latest, container 0.4.x)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host (CPU) devices for tests."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(spec: str):
+    """Mesh from a serve.py `--mesh dp,tp` flag: "2,4" → a (data=2, model=4)
+    mesh over the first dp·tp visible devices. Works on any backend — tests
+    force multiple host devices via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N (docs/parallel.md)."""
+    try:
+        dp, tp = (int(x) for x in spec.split(","))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects 'dp,tp' integers (e.g. '2,4'), got {spec!r}")
+    if dp < 1 or tp < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got dp={dp}, tp={tp}")
+    have = len(jax.devices())
+    if dp * tp > have:
+        raise ValueError(
+            f"--mesh {spec}: needs {dp * tp} devices, only {have} visible "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count={dp * tp} "
+            f"to emulate on host)")
+    return make_host_mesh(dp, tp)
 
 
 # v5e hardware constants (per chip) used by the roofline analysis.

@@ -111,19 +111,24 @@ def generate_tokens(
     bundle, params, prompt: jnp.ndarray, gen_len: int,
     *, eos_id: int | None = None, cache_dtype=jnp.bfloat16,
     loop_mode: str = "fused", temperature: float = 0.0, rng=None,
-    max_len: int | None = None,
+    max_len: int | None = None, mesh=None,
 ):
     """Greedy/sampled decode. prompt: (B, S). Returns (tokens (B, gen_len),
     stats). `loop_mode` = "fused" (routes through `ModelBundle.generate`, the
     single-dispatch scan engine) | "step" (per-token reference loop).
     `max_len` sizes the preallocated KV cache (a server sizes it for the
-    longest request it accepts, not for this one)."""
+    longest request it accepts, not for this one). `mesh` shards the fused
+    loop (docs/parallel.md); the per-token reference loop stays single-device
+    by design — it is the parity baseline."""
     if loop_mode == "fused":
         return bundle.generate(params, prompt, gen_len, eos_id=eos_id,
                                cache_dtype=cache_dtype, temperature=temperature,
-                               rng=rng, max_len=max_len)
+                               rng=rng, max_len=max_len, mesh=mesh)
     if loop_mode != "step":
         raise ValueError(f"unknown loop_mode {loop_mode!r}")
+    if mesh is not None:
+        raise ValueError("loop_mode='step' is the single-device parity "
+                         "reference; use the fused loop with a mesh")
     return _generate_stepwise(bundle, params, prompt, gen_len, eos_id=eos_id,
                               cache_dtype=cache_dtype, temperature=temperature,
                               rng=rng, max_len=max_len)
@@ -139,7 +144,7 @@ def generate(*args, **kwargs):
     return generate_tokens(*args, **kwargs)
 
 
-def run_traffic(bundle, params, args, cfg):
+def run_traffic(bundle, params, args, cfg, mesh=None):
     """Replay a Poisson arrival trace through the continuous-batching engine.
 
     Per-request stats throughout: the printed decode tok/s is the MEAN OF
@@ -163,7 +168,7 @@ def run_traffic(bundle, params, args, cfg):
         bundle, params, num_slots=args.num_slots, max_len=max_len,
         chunk=args.chunk, eos_id=args.eos_id,
         cache_dtype=jnp.dtype(cfg.dtype), temperature=args.temperature,
-        clock=clock)
+        clock=clock, mesh=mesh)
     results = engine.run(trace)
     agg = summarize(results)
     print(f"[serve] continuous: {agg['requests']} requests in "
@@ -218,11 +223,19 @@ def main(argv=None):
     ap.add_argument("--virtual-clock", action="store_true",
                     help="--traffic: compute-time virtual clock (no sleeps; "
                          "reproducible) instead of wall clock")
+    ap.add_argument("--mesh", default=None, metavar="DP,TP",
+                    help="serve tensor/data-parallel over a (data=DP, "
+                         "model=TP) device mesh — params TP over 'model', "
+                         "KV slots over 'data' (docs/parallel.md); tokens "
+                         "identical to the single-device run")
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
     if args.artifact is None and args.arch is None:
         ap.error("one of --arch or --artifact is required")
+    if args.mesh is not None and args.loop_mode == "step":
+        ap.error("--mesh requires the fused loop (loop_mode=step is the "
+                 "single-device parity reference)")
     if args.save_artifact and args.ratio <= 0:
         ap.error("--save-artifact requires --ratio > 0")
     if args.artifact is not None and (args.ratio > 0 or args.method is not None
@@ -242,16 +255,29 @@ def main(argv=None):
         print(f"[serve] base params from {args.base_params} (step {step})")
         return ckpt.restore(step, bundle.param_specs())
 
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_serving_mesh
+        try:
+            mesh = make_serving_mesh(args.mesh)
+        except ValueError as e:
+            ap.error(str(e))
+        print(f"[serve] mesh: data={mesh.shape['data']} "
+              f"model={mesh.shape['model']} "
+              f"({len(mesh.devices.ravel())} devices)")
+
     if args.artifact is not None:
-        # load → apply → serve: no IPCA / rank-train / SVD on this path
-        art = artifacts.load_artifact(args.artifact)
+        # load → apply → serve: no IPCA / rank-train / SVD on this path (and
+        # with --mesh, factor leaves land on their TP shards straight from
+        # disk — no host round-trip)
+        art = artifacts.load_artifact(args.artifact, mesh=mesh)
         cfg = art.config
         if args.set:
             cfg = parse_overrides(cfg, args.set)
             if cfg != art.config:
                 ap.error("--set cannot override an artifact's model config")
         bundle = build(cfg)
-        params = bundle.with_artifact(art, base_params(bundle))
+        params = bundle.with_artifact(art, base_params(bundle), mesh=mesh)
         print(f"[serve] artifact {args.artifact}: {art.report.summary()}")
         if args.base_params is None:
             print("[serve]   base (uncompressed) leaves from init(PRNGKey(0)) "
@@ -277,13 +303,14 @@ def main(argv=None):
                       f"({art.nbytes()/2**20:.2f} MiB of factors)")
 
     if args.traffic > 0:
-        return run_traffic(bundle, params, args, cfg)
+        return run_traffic(bundle, params, args, cfg, mesh=mesh)
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)
     toks, stats = generate_tokens(bundle, params, prompt, args.gen_len,
                                   eos_id=args.eos_id, cache_dtype=jnp.dtype(cfg.dtype),
-                                  loop_mode=args.loop_mode, temperature=args.temperature)
+                                  loop_mode=args.loop_mode, temperature=args.temperature,
+                                  mesh=mesh)
     print(f"[serve] {stats['loop_mode']}: prefill {stats['prefill_s']*1e3:.1f} ms, "
           f"decode {stats['decode_tok_per_s']:.1f} tok/s "
           f"({stats['live_tokens']} live tokens)")

@@ -40,7 +40,7 @@ class ModelBundle:
     # ---- fused generation -------------------------------------------------
     def generate(self, params, batch, gen_len: int, *, eos_id: int | None = None,
                  cache_dtype=jnp.bfloat16, max_len: int | None = None,
-                 temperature: float = 0.0, rng=None):
+                 temperature: float = 0.0, rng=None, mesh=None):
         """One-shot fused generation: prefill + the entire decode loop as one
         compiled `lax.scan`, KV cache and token buffer donated (updated in
         place). For request-level continuous batching over the same model,
@@ -49,19 +49,32 @@ class ModelBundle:
         `batch` is a prefill batch dict or a bare (B, S) token array. Returns
         (tokens (B, gen_len) int32, stats). Donation contract: do not reuse a
         cache after handing it to the engine. See models/generate.py.
+
+        `mesh` (a `jax.sharding.Mesh` with ("data","model") axes — see
+        docs/parallel.md) runs the same loops tensor/data-parallel: params
+        and cache are placed by parallel/sharding.py rules and activations
+        are constrained through the decode scan. Tokens match the
+        single-device run.
         """
         from repro.models.generate import get_engine
-        return get_engine(self, eos_id).generate(
+        return get_engine(self, eos_id, mesh).generate(
             params, batch, gen_len, cache_dtype=cache_dtype, max_len=max_len,
             temperature=temperature, rng=rng)
 
     # ---- compression artifacts --------------------------------------------
-    def with_artifact(self, artifact, params=None, *, rng=None):
+    def with_artifact(self, artifact, params=None, *, rng=None, mesh=None):
         """Servable params from a `CompressionArtifact`: swap its compressed
         leaves into `params` (a fresh `init(rng)` when omitted). No IPCA /
         rank-train / SVD work happens here — the artifact already carries the
         factored or remapped leaves; this is the compress-once/serve-many
-        load path (docs/api.md)."""
+        load path (docs/api.md). With a `mesh`, the servable pytree lands
+        sharded (artifact.apply's mesh path; docs/parallel.md).
+
+        A caller-supplied base `params` is validated against this bundle's
+        config BEFORE any leaf is applied, so a wrong checkpoint fails here
+        with the offending path — not deep inside `apply` with an opaque
+        reshape/stack error. Covers every consumer: serve.py --artifact
+        --base-params, `ContinuousEngine.from_artifact`, direct calls."""
         if artifact.config != self.cfg:
             raise ValueError(
                 f"artifact was built for config {artifact.config.name!r} "
@@ -69,7 +82,26 @@ class ModelBundle:
                 f"{self.cfg.name!r} (d_model={self.cfg.d_model})")
         if params is None:
             params = self.init(rng if rng is not None else jax.random.PRNGKey(0))
-        return artifact.apply(params)
+        else:
+            self._validate_base_params(params, artifact)
+        return artifact.apply(params, mesh=mesh)
+
+    def _validate_base_params(self, params, artifact) -> None:
+        expect = dict(_flat_shapes(self.param_specs()))
+        got = dict(_flat_shapes(params))
+        missing = sorted(set(expect) - set(got))
+        extra = sorted(set(got) - set(expect))
+        if missing or extra:
+            raise ValueError(
+                f"base params do not match artifact config "
+                f"{artifact.config.name!r}: missing leaves {missing[:3]}, "
+                f"unexpected leaves {extra[:3]}")
+        for path, shape in expect.items():
+            if got[path] != shape:
+                raise ValueError(
+                    f"base params do not match artifact config "
+                    f"{artifact.config.name!r}: leaf {path} has shape "
+                    f"{got[path]}, config expects {shape}")
 
     # ---- dry-run specs ----------------------------------------------------
     def input_specs(self, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
@@ -128,6 +160,12 @@ class ModelBundle:
             return diff[0]
 
         return jax.tree.map(axis, one, two)
+
+
+def _flat_shapes(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), tuple(leaf.shape)
 
 
 def _lm_bundle(cfg: ModelConfig) -> ModelBundle:

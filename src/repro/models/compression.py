@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import math
 import re
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -457,6 +458,11 @@ def compress_model_params(
     """Legacy surface: returns (new params pytree, rank map), discarding the
     report. Prefer `repro.compress(...)` → CompressionArtifact, which keeps
     the report + factors and can be saved/loaded/served."""
+    warnings.warn(
+        "compress_model_params is the legacy two-step surface (it discards "
+        "the CompressionReport); use repro.compress(...) -> "
+        "CompressionArtifact and artifact.apply(params) instead",
+        DeprecationWarning, stacklevel=2)
     factors, report = compress_model_factors(
         params, cfg, token_batches, target_ratio, method=method,
         trained_soft_ks=trained_soft_ks, quantize=quantize,

@@ -192,7 +192,7 @@ def prime_self_cache(
         body, x, (params["dec_blocks"], cache.self_kv), cfg.scan_layers)
     x = L.rmsnorm(params["final_norm"], x[:, -1:])
     logits = L.apply_linear(params["lm_head"], x)
-    return logits[:, 0], cache._replace(self_kv=new_self)
+    return constrain_logits(logits[:, 0]), cache._replace(self_kv=new_self)
 
 
 def decode_step_encdec(
@@ -237,4 +237,4 @@ def decode_step_encdec(
     )
     x = L.rmsnorm(params["final_norm"], x)
     logits = L.apply_linear(params["lm_head"], x)
-    return logits[:, 0], cache._replace(self_kv=new_self)
+    return constrain_logits(logits[:, 0]), cache._replace(self_kv=new_self)

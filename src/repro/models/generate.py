@@ -166,22 +166,49 @@ def live_token_counts(toks, eos_id: int | None) -> np.ndarray:
     return np.where(hit.any(axis=1), hit.argmax(axis=1) + 1, t.shape[1])
 
 
+def _mesh_scope(fn, mesh):
+    """Wrap `fn` so it traces (and re-traces) inside the activation-sharding
+    scope of `mesh`: the constrain_batch/constrain_logits anchors in the
+    decode bodies resolve against it. mesh=None returns `fn` unchanged, so the
+    single-device path is byte-for-byte the same trace as before."""
+    if mesh is None:
+        return fn
+    from repro.parallel.sharding import activation_sharding
+
+    @functools.wraps(fn)
+    def scoped(*args, **kwargs):
+        with activation_sharding(mesh):
+            return fn(*args, **kwargs)
+
+    return scoped
+
+
 class GenerationEngine:
     """Compiled prefill + decode loops (fused one-shot and chunked) for one
     ModelBundle.
 
     Construct once (or via `get_engine`) and reuse: the jitted callables carry
     the compilation cache. `eos_id` is baked into the compiled loops.
+
+    With a `mesh`, every compiled callable traces under the activation-
+    sharding scope (parallel/sharding.py) and `generate` places params and the
+    fresh cache onto the mesh (params replicated over data / TP over "model",
+    cache slots over data / heads over "model") — same math, partitioned
+    matmuls. Serving callers (serving/engine.py) do their own placement and
+    reuse the scoped callables.
     """
 
-    def __init__(self, bundle, *, eos_id: int | None = None):
+    def __init__(self, bundle, *, eos_id: int | None = None, mesh=None):
         self.bundle = bundle
         self.eos_id = eos_id
-        self._prefill = jax.jit(bundle.prefill, donate_argnums=(2,))
+        self.mesh = mesh
+        self._prefill = jax.jit(_mesh_scope(bundle.prefill, mesh),
+                                donate_argnums=(2,))
         self._loop = jax.jit(
-            make_decode_loop(bundle.decode_step, eos_id),
+            _mesh_scope(make_decode_loop(bundle.decode_step, eos_id), mesh),
             donate_argnums=(2, 3), static_argnames=("do_sample",))
         self._chunk_loops: dict[int, Any] = {}
+        self._param_sharding = None     # built lazily on first mesh generate
 
     def chunk_loop(self, chunk: int):
         """The jitted chunked decode loop for `chunk` tokens per dispatch
@@ -189,8 +216,11 @@ class GenerationEngine:
         no-recompile-on-admission contract). One compile per chunk size."""
         fn = self._chunk_loops.get(chunk)
         if fn is None:
-            fn = jax.jit(make_chunk_loop(self.bundle.decode_step, self.eos_id, chunk),
-                         donate_argnums=(2,), static_argnames=("do_sample",))
+            fn = jax.jit(
+                _mesh_scope(
+                    make_chunk_loop(self.bundle.decode_step, self.eos_id, chunk),
+                    self.mesh),
+                donate_argnums=(2,), static_argnames=("do_sample",))
             self._chunk_loops[chunk] = fn
         return fn
 
@@ -218,6 +248,16 @@ class GenerationEngine:
         start = self.start_length(s)
         max_len = max_len if max_len is not None else start + gen_len + 8
         cache = self.bundle.init_cache(params, b, max_len=max_len, dtype=cache_dtype)
+        if self.mesh is not None:
+            from repro.parallel import sharding as shardlib
+            if self._param_sharding is None:
+                # params structure is fixed per bundle; build the sharding
+                # tree once so repeat calls pay only a no-op device_put on
+                # already-placed leaves
+                self._param_sharding = shardlib.make_sharding(
+                    self.mesh, shardlib.param_specs(params, fsdp=False))
+            params = jax.device_put(params, self._param_sharding)
+            cache = shardlib.place_cache(self.mesh, cache, self.bundle.cfg)
 
         t0 = time.perf_counter()
         logits, cache = jax.block_until_ready(self._prefill(params, batch, cache))
@@ -247,6 +287,8 @@ class GenerationEngine:
 
 
 @functools.lru_cache(maxsize=32)
-def get_engine(bundle, eos_id: int | None = None) -> GenerationEngine:
-    """Engine cache so repeated `bundle.generate(...)` calls reuse compiles."""
-    return GenerationEngine(bundle, eos_id=eos_id)
+def get_engine(bundle, eos_id: int | None = None, mesh=None) -> GenerationEngine:
+    """Engine cache so repeated `bundle.generate(...)` calls reuse compiles.
+    Keyed on (bundle, eos_id, mesh): a sharded engine never shares traces
+    with the single-device one."""
+    return GenerationEngine(bundle, eos_id=eos_id, mesh=mesh)

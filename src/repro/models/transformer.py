@@ -657,7 +657,7 @@ def prefill(
         logits = x @ params["embed"].T.astype(x.dtype)
     else:
         logits = L.apply_linear(head, x)
-    return logits[:, 0], new_cache
+    return constrain_logits(logits[:, 0]), new_cache
 
 
 def decode_step(
@@ -783,7 +783,10 @@ def decode_step(
         logits = x @ params["embed"].T.astype(x.dtype)
     else:
         logits = L.apply_linear(head, x)
-    return logits[:, 0], new_cache
+    # anchor the (B, V) decode logits like forward's (batch over data, vocab
+    # over "model") so the sharded chunk loop's argmax/sample partitions
+    # instead of gathering the vocab dim every step
+    return constrain_logits(logits[:, 0]), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 # ---------------------------------------------------------------------------
 # Vocab-parallel cross-entropy
@@ -75,7 +77,7 @@ def vocab_parallel_ce(
         return num / jnp.maximum(den, 1.0)
 
     bspec = P(batch_axes, None)
-    out = jax.shard_map(
+    out = shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_axes, None, None), P(None, axis), bspec, bspec),
         out_specs=P(),
@@ -122,7 +124,7 @@ def seq_parallel_decode_attention(
         out = acc / jnp.maximum(lsum, 1e-30).transpose(0, 2, 1)[..., None]
         return out.astype(qq.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None)),
         out_specs=P(),

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 def pipeline_forward(
     stage_fn: Callable[[jnp.ndarray, dict], jnp.ndarray],
@@ -74,7 +76,7 @@ def pipeline_forward(
         return jax.lax.psum(outs, axis)[None]
 
     # params: stage dim sharded; x: replicated in, result replicated out
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=P(axis),

@@ -18,11 +18,18 @@ factors shard W1's input dim over "model" so the TP all-reduce happens on the
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# jax.shard_map graduated from jax.experimental after 0.4.x; resolve once so
+# every collective/pipeline call site works on both (CI latest, container 0.4)
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:                                           # pragma: no cover - old jax
+    from jax.experimental.shard_map import shard_map
 
 
 # (suffix, (in_axis, out_axis)) for 2D weight leaves; in/out name the mesh axis
@@ -144,6 +151,36 @@ def param_specs(params: Any, *, fsdp: bool = True, ep: bool = False) -> Any:
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
+def factor_spec(matrix_name: str, leaf: str, ndim: int, *,
+                fsdp: bool = False) -> P:
+    """Sharding for one leaf of a CompressionArtifact factor dict.
+
+    Artifact factors are keyed by flat matrix names (``layer0.wq``,
+    ``shared_attn@0.wo``, ``layer1.expert3.down``) rather than params-pytree
+    paths, so the owner linear is the name's last dot-component. Serving
+    defaults to fsdp=False (params replicated over the data axes, TP over
+    "model") — the low-rank-aware TP layout of `_lowrank_spec`.
+    """
+    owner = matrix_name.rsplit(".", 1)[-1]
+    if leaf not in _LR_LEAVES:
+        raise ValueError(f"{matrix_name}: unknown factor leaf {leaf!r}")
+    if owner not in (_COL_PARALLEL | _ROW_PARALLEL):
+        return P()
+    return _lowrank_spec(owner, leaf, ndim, "data" if fsdp else None)
+
+
+def factor_specs(factors: Mapping[str, Mapping[str, Any]], *,
+                 fsdp: bool = False) -> dict:
+    """PartitionSpec tree for an artifact's `factors` mapping (arrays or
+    ShapeDtypeStructs). Used by the sharded artifact load path
+    (artifacts/artifact.py) to place factored leaves straight onto a mesh."""
+    return {
+        name: {leaf: factor_spec(name, leaf, arr.ndim, fsdp=fsdp)
+               for leaf, arr in fdict.items()}
+        for name, fdict in factors.items()
+    }
+
+
 def batch_spec(batch: Any, mesh: Mesh) -> Any:
     """Shard the leading (batch) dim over all data-parallel axes that divide it."""
     dp_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
@@ -229,6 +266,21 @@ def make_sharding(mesh: Mesh, spec_tree: Any) -> Any:
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+def place_params(mesh: Mesh, params: Any, *, fsdp: bool = False,
+                 ep: bool = False) -> Any:
+    """device_put a params pytree onto `mesh` under the param rules. Serving
+    defaults to fsdp=False: replicate over the data axes (decode matmuls pay
+    no per-step all-gather), TP over "model"."""
+    return jax.device_put(
+        params, make_sharding(mesh, param_specs(params, fsdp=fsdp, ep=ep)))
+
+
+def place_cache(mesh: Mesh, cache: Any, cfg) -> Any:
+    """device_put a KV/state cache pytree onto `mesh` under the cache rules
+    (slot/batch dim over the data axes, heads over "model")."""
+    return jax.device_put(cache, make_sharding(mesh, cache_spec(cache, mesh, cfg)))
 
 
 # ---------------------------------------------------------------------------

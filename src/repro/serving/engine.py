@@ -38,8 +38,10 @@ from typing import Callable, Iterable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.generate import get_engine, select_token_per_slot
+from repro.parallel import sharding as shardlib
 from repro.serving.request import Request, RequestQueue, RequestStats
 from repro.serving.slots import SlotManager
 from repro.serving.traffic import WallClock
@@ -76,12 +78,22 @@ class ContinuousEngine:
     Decoder-only token-prompt models only (uniform/gemma/zamba templates);
     encoder–decoder and prefix-embedding (VLM) bundles are rejected — their
     prefill consumes modality inputs the admission path doesn't thread yet.
+
+    `mesh` (a `jax.sharding.Mesh` with ("data","model") axes, docs/parallel.md)
+    makes the whole lifecycle mesh-aware: params go TP over "model" /
+    replicated over data, the slot pool's batch dim shards over the data axes
+    with KV heads over "model" (parallel/sharding.py:cache_spec), the chunk
+    loop traces under the activation-sharding scope, and the per-slot host
+    vectors stay replicated so admit/retire remain value rewrites — the slot
+    insert is a masked in-place update on whichever data shard owns the slot,
+    never a cross-device gather. Tokens are identical to the single-device
+    engine (tests/test_sharded_serving_multidev.py pins this bitwise).
     """
 
     def __init__(self, bundle, params, *, num_slots: int, max_len: int,
                  chunk: int = 8, eos_id: int | None = None,
                  cache_dtype=jnp.bfloat16, temperature: float = 0.0,
-                 rng=None, clock=None):
+                 rng=None, clock=None, mesh=None):
         cfg = bundle.cfg
         if cfg.is_encoder_decoder or cfg.family in ("audio", "vlm"):
             raise NotImplementedError(
@@ -90,6 +102,14 @@ class ContinuousEngine:
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
         self.bundle = bundle
+        self.mesh = mesh
+        if mesh is not None:
+            # one sharding tree, reused for placement AND the pinned
+            # in_shardings below; device_put is a no-op for leaves already
+            # placed by a with_artifact(mesh=...) load
+            self._param_sharding = shardlib.make_sharding(
+                mesh, shardlib.param_specs(params, fsdp=False))
+            params = jax.device_put(params, self._param_sharding)
         self.params = params
         self.max_len = max_len
         self.chunk = chunk
@@ -102,16 +122,24 @@ class ContinuousEngine:
 
         # get_engine: the same cached GenerationEngine that bundle.generate
         # uses, so admission prefill shares its jitted (donated) prefill and
-        # compile cache with one-shot/solo runs instead of re-tracing them
-        self.gen = get_engine(bundle, eos_id)
-        self._chunk_fn = self.gen.chunk_loop(chunk)
-        self._prefill = self.gen._prefill
-        self._insert = jax.jit(make_slot_insert(bundle.cache_slot_axes()),
-                               donate_argnums=(0,))
+        # compile cache with one-shot/solo runs instead of re-tracing them.
+        # A mesh engine is a separate cache entry — sharded traces never mix
+        # with single-device ones.
+        self.gen = get_engine(bundle, eos_id, mesh)
+        if mesh is None:
+            self._chunk_fn = self.gen.chunk_loop(chunk)
+            self._prefill = self.gen._prefill
+            self._insert = jax.jit(make_slot_insert(bundle.cache_slot_axes()),
+                                   donate_argnums=(0,))
+            self._vec_sharding = None
+        else:
+            self._build_sharded_fns(num_slots)
         # the ONE cache allocation: (num_slots, max_len) per layer, donated
         # through every insert/chunk dispatch for the engine's lifetime
         self.pool = bundle.init_cache(params, num_slots, max_len=max_len,
                                       dtype=cache_dtype)
+        if mesh is not None:
+            self.pool = jax.device_put(self.pool, self._pool_sharding)
         self.slots = SlotManager(num_slots)
         self.queue = RequestQueue()
         self.results: dict[int, tuple[np.ndarray, RequestStats]] = {}
@@ -119,27 +147,81 @@ class ContinuousEngine:
         self._scratch = None    # recycled batch-1 admission cache, see _admit
         self.chunks_run = 0
 
+    def _build_sharded_fns(self, num_slots: int) -> None:
+        """Compile the mesh engine's prefill / slot-insert / chunk loop with
+        PINNED shardings. Inference would work, but XLA may legally pick
+        different layouts for the insert-produced pool vs the chunk-produced
+        pool — one silent recompile per divergence and a resharding copy per
+        chunk. Pinning the pool to `cache_spec` (slots over data, heads over
+        "model") and every per-slot vector to replicated keeps the engine at
+        exactly one executable per callable for its whole lifetime (the
+        multi-device parity suite asserts `_cache_size() == 1`)."""
+        from repro.models.generate import _mesh_scope, make_chunk_loop
+
+        bundle, mesh, cfg = self.bundle, self.mesh, self.bundle.cfg
+        rep = NamedSharding(mesh, P())
+        self._vec_sharding = rep
+        param_sh = self._param_sharding
+        pool_specs = bundle.cache_specs(num_slots, self.max_len,
+                                        dtype=self.cache_dtype)
+        self._pool_sharding = shardlib.make_sharding(
+            mesh, shardlib.cache_spec(pool_specs, mesh, cfg))
+        one_specs = bundle.cache_specs(1, self.max_len, dtype=self.cache_dtype)
+        one_sh = shardlib.make_sharding(
+            mesh, shardlib.cache_spec(one_specs, mesh, cfg))
+
+        self._one_sharding = one_sh
+        self._prefill = jax.jit(
+            _mesh_scope(bundle.prefill, mesh), donate_argnums=(2,),
+            in_shardings=(param_sh, rep, one_sh),
+            out_shardings=(rep, one_sh))
+        self._insert = jax.jit(
+            make_slot_insert(bundle.cache_slot_axes()), donate_argnums=(0,),
+            in_shardings=(self._pool_sharding, one_sh, rep),
+            out_shardings=self._pool_sharding)
+        # pjit rejects kwargs alongside in_shardings, so the static
+        # `do_sample` (fixed at construction by `temperature`) is baked into
+        # the traced callable instead of threaded per call
+        chunk_raw = make_chunk_loop(bundle.decode_step, self.eos_id, self.chunk)
+        do_sample = self.do_sample
+
+        def chunk_call(params, tok, cache, lengths, alive, seeds, rng, temp):
+            return chunk_raw(params, tok, cache, lengths, alive, seeds, rng,
+                             temp, do_sample=do_sample)
+
+        self._chunk_fn = jax.jit(
+            _mesh_scope(chunk_call, mesh), donate_argnums=(2,),
+            in_shardings=(param_sh, rep, self._pool_sharding,
+                          rep, rep, rep, rep, rep),
+            out_shardings=(rep, rep, self._pool_sharding, rep, rep))
+
     @classmethod
-    def from_artifact(cls, artifact, *, params=None, rng=None, **engine_kw
-                      ) -> "ContinuousEngine":
+    def from_artifact(cls, artifact, *, params=None, rng=None, mesh=None,
+                      **engine_kw) -> "ContinuousEngine":
         """Build an engine straight from a `CompressionArtifact` (or a saved
         artifact directory): the bundle comes from the artifact's config and
         the servable params from `bundle.with_artifact` — compress once,
         serve many times with zero recompression on this path. `params`
         supplies the base (uncompressed) leaves the artifact doesn't carry;
-        omitted, a fresh `init(rng)` is used. Remaining kwargs are the
-        `ContinuousEngine(...)` arguments (num_slots, max_len, chunk, …)."""
+        omitted, a fresh `init(rng)` is used. The base pytree is validated
+        against the artifact's config BEFORE any leaf is applied
+        (`ModelBundle.with_artifact`) — a mismatched checkpoint fails with
+        the offending path, not deep inside `apply` with a shape error. With
+        a `mesh`, a directory load restores each factor leaf straight onto
+        its mesh sharding and the engine itself is built sharded. Remaining
+        kwargs are the `ContinuousEngine(...)` arguments (num_slots,
+        max_len, chunk, …)."""
         import os
         from repro.artifacts import CompressionArtifact, load_artifact
         from repro.models import build
         if isinstance(artifact, (str, os.PathLike)):
-            artifact = load_artifact(os.fspath(artifact))
+            artifact = load_artifact(os.fspath(artifact), mesh=mesh)
         if not isinstance(artifact, CompressionArtifact):
             raise TypeError(f"expected CompressionArtifact or path, got "
                             f"{type(artifact).__name__}")
         bundle = build(artifact.config)
-        servable = bundle.with_artifact(artifact, params, rng=rng)
-        return cls(bundle, servable, **engine_kw)
+        servable = bundle.with_artifact(artifact, params, rng=rng, mesh=mesh)
+        return cls(bundle, servable, mesh=mesh, **engine_kw)
 
     def reset(self, clock) -> None:
         """Forget completed requests and restart the clock for another run.
@@ -180,6 +262,12 @@ class ContinuousEngine:
         if self._scratch is None:
             self._scratch = self.bundle.init_cache(
                 self.params, 1, max_len=self.max_len, dtype=self.cache_dtype)
+            if self.mesh is not None:
+                # batch-1 cache: slot dim can't split, so it rides replicated
+                # over data with heads over "model" — the insert then writes
+                # each pool shard's slice from its local copy, no gather
+                self._scratch = shardlib.place_cache(
+                    self.mesh, self._scratch, self.bundle.cfg)
         logits, cache1 = self._prefill(
             self.params, {"tokens": jnp.asarray(request.prompt)[None]},
             self._scratch)
@@ -216,12 +304,16 @@ class ContinuousEngine:
     def _step_chunk(self) -> None:
         s = self.slots
         t0 = time.perf_counter()
-        toks, tok, self.pool, lengths, alive = self._chunk_fn(
-            self.params, jnp.asarray(s.tok), self.pool,
-            jnp.asarray(s.lengths), jnp.asarray(s.alive),
-            jnp.asarray(s.seeds), self.rng,
-            jnp.asarray(self.temperature, jnp.float32),
-            do_sample=self.do_sample)
+        tok_d, len_d, alive_d, seeds_d = s.device_state(self._vec_sharding)
+        temp = jnp.asarray(self.temperature, jnp.float32)
+        if self.mesh is None:
+            toks, tok, self.pool, lengths, alive = self._chunk_fn(
+                self.params, tok_d, self.pool, len_d, alive_d, seeds_d,
+                self.rng, temp, do_sample=self.do_sample)
+        else:   # sharded chunk fn has do_sample baked in (no pjit kwargs)
+            toks, tok, self.pool, lengths, alive = self._chunk_fn(
+                self.params, tok_d, self.pool, len_d, alive_d, seeds_d,
+                self.rng, temp)
         toks = np.asarray(jax.block_until_ready(toks))  # the host sync point
         self.clock.advance(time.perf_counter() - t0)
         self.chunks_run += 1

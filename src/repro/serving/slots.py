@@ -18,6 +18,8 @@ tests/test_continuous_batching.py).
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.request import Request, RequestStats
@@ -50,6 +52,18 @@ class SlotManager:
     @property
     def num_active(self) -> int:
         return sum(r is not None for r in self.requests)
+
+    def device_state(self, sharding=None) -> tuple[jnp.ndarray, ...]:
+        """The four per-slot vectors (tok, lengths, alive, seeds) as device
+        arrays for one chunk dispatch. With a `sharding` (the engine passes a
+        replicated NamedSharding on its mesh), each vector is committed to
+        that layout so every dispatch sees one stable placement — admissions
+        and retirements stay host-side value rewrites and never reshard the
+        pool."""
+        arrs = (self.tok, self.lengths, self.alive, self.seeds)
+        if sharding is None:
+            return tuple(jnp.asarray(a) for a in arrs)
+        return tuple(jax.device_put(a, sharding) for a in arrs)
 
     # ---- lifecycle --------------------------------------------------------
     def admit(self, slot: int, request: Request, stats: RequestStats,

@@ -1,0 +1,62 @@
+"""Shared tiny-model fixtures for the tier-1 suite.
+
+The three decoder templates (uniform / gemma / zamba) and their calibration
+batches used to be copy-pasted builders in test_artifact.py,
+test_continuous_batching.py and test_fused_generate.py. They live here once:
+
+  * `build_smoke(arch)` → (cfg, bundle, params) — session-cached, so every
+    test file shares ONE bundle per template and `models.generate.get_engine`
+    reuses its compiled loops across files instead of re-tracing them.
+  * `calib_batches(arch)` → tuple of token batches for compression calls.
+  * `TEMPLATES` — the canonical three-template parametrize list.
+
+Plain helpers (importable as `from conftest import ...` under pytest's
+rootdir import mode) plus fixture wrappers for tests that prefer injection.
+Params are never mutated by tests — engines donate *caches*, not params — so
+the cache is safe to share.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build
+
+# uniform / gemma (sliding-window groups) / zamba (mamba + shared attention)
+TEMPLATES = ("olmo-1b", "gemma3-4b", "zamba2-2.7b")
+
+
+@functools.lru_cache(maxsize=None)
+def build_smoke(arch: str):
+    """(cfg, bundle, params) for one smoke template, cached per process."""
+    cfg = smoke_config(arch)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return cfg, bundle, params
+
+
+@functools.lru_cache(maxsize=None)
+def calib_batches(arch: str, n: int = 2, batch: int = 2, seq: int = 16):
+    """Deterministic calibration token batches for `repro.compress` calls."""
+    cfg = smoke_config(arch)
+    return tuple(
+        jax.random.randint(jax.random.PRNGKey(i), (batch, seq), 0,
+                           cfg.vocab_size)
+        for i in range(n)
+    )
+
+
+@pytest.fixture(scope="session")
+def smoke():
+    """Factory fixture: `smoke(arch)` → (cfg, bundle, params)."""
+    return build_smoke
+
+
+@pytest.fixture(scope="session")
+def calib():
+    """Factory fixture: `calib(arch)` → list of calibration batches."""
+    return lambda arch, **kw: list(calib_batches(arch, **kw))

@@ -12,20 +12,13 @@ import jax
 import jax.numpy as jnp
 
 import repro
+from conftest import TEMPLATES, build_smoke, calib_batches
 from repro.artifacts import CompressionArtifact, CompressionReport, load_artifact
-from repro.configs import smoke_config
-from repro.models import build
-
-TEMPLATES = ["olmo-1b", "gemma3-4b", "zamba2-2.7b"]   # uniform / gemma / zamba
 
 
 def _setup(arch):
-    cfg = smoke_config(arch)
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0, cfg.vocab_size)
-             for i in range(2)]
-    return cfg, bundle, params, calib
+    cfg, bundle, params = build_smoke(arch)
+    return cfg, bundle, params, list(calib_batches(arch))
 
 
 def _assert_factors_bitwise_equal(fa, fb):
@@ -148,39 +141,13 @@ def test_with_artifact_rejects_config_mismatch():
     cfg, bundle, params, calib = _setup("olmo-1b")
     art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
                          calib=calib)
-    other = build(smoke_config("gemma3-4b"))
+    other = build_smoke("gemma3-4b")[1]
     with pytest.raises(ValueError, match="artifact was built for"):
         other.with_artifact(art)
 
 
-def test_legacy_entry_point_shims():
-    cfg, bundle, params, calib = _setup("olmo-1b")
-
-    # compress_model_params still returns the (params, kmap) tuple
-    from repro.models.compression import compress_model_params
-    cparams, kmap = compress_model_params(params, cfg, calib, 0.5,
-                                          method="dobi_noremap", quantize=False)
-    assert isinstance(kmap, dict) and len(kmap) > 0
-
-    # launch.serve.generate warns but still works
-    from repro.launch import serve as serve_mod
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
-    with pytest.warns(DeprecationWarning):
-        t_old, _ = serve_mod.generate(bundle, params, prompt, 4,
-                                      cache_dtype=jnp.float32)
-    t_new, _ = serve_mod.generate_tokens(bundle, params, prompt, 4,
-                                         cache_dtype=jnp.float32)
-    np.testing.assert_array_equal(np.asarray(t_old), np.asarray(t_new))
-
-    # rank_train.run: structured result + legacy 4-tuple unpack shim
-    from repro.launch.rank_train import run as rank_train_run, RankTrainResult
-    res = rank_train_run(cfg, ratio=0.5, steps=2, batch=2, seq=12,
-                         svd_rank_cap=8, params=params)
-    assert isinstance(res, RankTrainResult)
-    assert set(res.soft_ks) == set(res.names)
-    with pytest.warns(DeprecationWarning):
-        core_res, soft_ks, p, b = res
-    assert soft_ks == res.soft_ks and p is params
+# legacy-entry-point shims are pinned in tests/test_shims.py (exactly-one-
+# warning + delegation contracts; CI runs them under -W error::DeprecationWarning)
 
 
 def test_load_missing_artifact_raises(tmp_path):

@@ -28,8 +28,8 @@ def test_vocab_parallel_ce_exact():
     _run("""
     import jax, jax.numpy as jnp
     from repro.parallel.collectives import vocab_parallel_ce
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((2, 4), ("data", "model"))
     h = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 16))
     head = jax.random.normal(jax.random.PRNGKey(1), (16, 32)) / 4
     tgt = jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 32)
@@ -47,8 +47,8 @@ def test_seq_parallel_decode_attention_exact():
     import jax, jax.numpy as jnp
     from repro.parallel.collectives import seq_parallel_decode_attention
     from repro.models import layers as L
-    mesh = jax.make_mesh((8, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((8, 1), ("data", "model"))
     q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 4, 8))
     kc = jax.random.normal(jax.random.PRNGKey(4), (1, 16, 2, 8))
     vc = jax.random.normal(jax.random.PRNGKey(5), (1, 16, 2, 8))
@@ -77,8 +77,8 @@ def test_sharded_train_step_runs_and_matches_single_device():
              "targets": jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, 512)}
     p1, o1, l1 = jax.jit(train_step)(params, ost, batch)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((4, 2), ("data", "model"))
     pspecs = shardlib.make_sharding(mesh, shardlib.param_specs(params))
     ospecs = shardlib.make_sharding(mesh, shardlib.param_specs(ost))
     bspecs = shardlib.make_sharding(mesh, shardlib.batch_spec(batch, mesh))
@@ -126,8 +126,8 @@ def test_grad_compression_cross_pod():
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.parallel.collectives import cross_pod_psum_compressed
-    mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((2, 4), ("pod", "data"))
     grads = {"w": jnp.linspace(-1, 1, 64).reshape(8, 8)}
     err0 = jax.tree.map(jnp.zeros_like, grads)
 
@@ -135,7 +135,8 @@ def test_grad_compression_cross_pod():
         mean, new_err = cross_pod_psum_compressed(g, err0, mesh, axis="pod")
         return mean
 
-    out = jax.shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P())(grads)
+    from repro.parallel.sharding import shard_map
+    out = shard_map(body, mesh=mesh, in_specs=(P(),), out_specs=P())(grads)
     # identical replicas → mean == original, up to int8 quantization error
     err = float(jnp.abs(out["w"] - grads["w"]).max())
     assert err < 0.02, err

@@ -10,19 +10,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import smoke_config
-from repro.models import build
+from conftest import TEMPLATES, build_smoke as _bundle
 from repro.serving import ContinuousEngine, Request, VirtualClock, poisson_trace
 from repro.serving.engine import summarize
 
 MAX_LEN = 64
-
-
-def _bundle(arch):
-    cfg = smoke_config(arch)
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    return cfg, bundle, params
 
 
 def _engine(bundle, params, *, num_slots=3, chunk=4, eos_id=None,
@@ -65,7 +57,7 @@ def test_freed_slot_never_leaks_stale_state():
     """Slot-reuse reset: poison the pool cache, then force every request
     through the SAME slot after a longer request — any stale KV (or mamba
     conv/ssm state) surviving admission would change the tokens."""
-    for arch in ("olmo-1b", "gemma3-4b", "zamba2-2.7b"):
+    for arch in TEMPLATES:
         cfg, bundle, params = _bundle(arch)
         eng = _engine(bundle, params, num_slots=1, chunk=4)
         # garbage everywhere a missed reset could read from
@@ -81,7 +73,7 @@ def test_freed_slot_never_leaks_stale_state():
                 err_msg=f"{arch} rid {r.rid}: stale slot state leaked")
 
 
-@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b", "zamba2-2.7b"])
+@pytest.mark.parametrize("arch", TEMPLATES)
 def test_decode_step_vector_lengths_match_scalar(arch):
     """The (B,) per-slot lengths path must be bitwise identical to the scalar
     path when all slots share one position — on every decoder template

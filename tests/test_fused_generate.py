@@ -7,10 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
+from conftest import build_smoke, calib_batches
 from repro.configs import smoke_config, ShapeConfig
 from repro.launch.serve import generate_tokens
-from repro.models import build
-from repro.models.compression import compress_model_params
 from repro.models.generate import live_token_counts
 
 
@@ -23,9 +23,7 @@ def _both_modes(bundle, params, prompt, gen_len, **kw):
 
 
 def test_fused_matches_step_dense():
-    cfg = smoke_config("olmo-1b")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    cfg, bundle, params = build_smoke("olmo-1b")
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
     (tf, sf), (ts, _) = _both_modes(bundle, params, prompt, 8)
     np.testing.assert_array_equal(tf, ts)
@@ -34,22 +32,17 @@ def test_fused_matches_step_dense():
 
 
 def test_fused_matches_step_compressed():
-    cfg = smoke_config("olmo-1b")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
-    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0, cfg.vocab_size)
-             for i in range(2)]
-    cparams, _ = compress_model_params(params, cfg, calib, 0.5,
-                                       method="dobi_noremap", quantize=False)
+    cfg, bundle, params = build_smoke("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=list(calib_batches("olmo-1b")))
+    cparams = art.apply(params)
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
     (tf, _), (ts, _) = _both_modes(bundle, cparams, prompt, 8)
     np.testing.assert_array_equal(tf, ts)
 
 
 def test_fused_matches_step_encdec():
-    cfg = smoke_config("whisper-base")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    cfg, bundle, params = build_smoke("whisper-base")
     b, s, gen = 2, 8, 8
     batch = {
         "frames": jax.random.normal(
@@ -81,9 +74,7 @@ def test_fused_matches_step_encdec():
 
 
 def test_eos_freezes_sequences_identically():
-    cfg = smoke_config("olmo-1b")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    cfg, bundle, params = build_smoke("olmo-1b")
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
     free, _ = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
     eos = int(np.asarray(free)[0, 2])   # force an EOS hit mid-sequence

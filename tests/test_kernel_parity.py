@@ -1,0 +1,106 @@
+"""Parametrized Pallas-vs-reference parity for the two compressed-matmul
+kernels, swept over odd / non-tile-multiple shapes and the dtypes the serving
+stack actually feeds them (bf16 activations, int8 quantized factors).
+
+Complements test_kernels.py (which also property-tests via hypothesis): this
+file is pure pytest parametrize — it runs everywhere, with EXPLICIT per-dtype
+tolerance assertions so a tolerance regression is a one-line diff. Kernels
+run in interpret mode on CPU (ops.py pads shapes to tile multiples and
+unpads the result; that pad/unpad path is exactly what odd shapes exercise).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+# (M, K, R, N): every value chosen to NOT be a multiple of the kernel tiles
+# (bm=128, bk=512, bn=256, R whole in VMEM padded to 128) except the aligned
+# control row
+LOWRANK_SHAPES = [
+    (1, 64, 8, 48),          # single row (decode step shape)
+    (13, 700, 33, 81),       # awkward primes
+    (17, 129, 5, 257),       # one past tile boundaries
+    (96, 384, 48, 192),      # multiples of 8/128 but not of bk/bn
+    (128, 512, 128, 256),    # tile-aligned control
+]
+
+# explicit tolerances per compute dtype: fp32 accumulates exactly in the
+# reference too (1e-4 covers association-order drift); bf16 inputs round to
+# 8 mantissa bits before the MXU (3e-2 absolute on O(1) outputs)
+LOWRANK_TOL = {jnp.float32: 1e-4, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("shape", LOWRANK_SHAPES)
+def test_lowrank_matmul_parity(shape, dtype):
+    m, k, r, n = shape
+    key = jax.random.PRNGKey(sum(shape))
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    w1 = (jax.random.normal(jax.random.fold_in(key, 1), (k, r))
+          / np.sqrt(k)).astype(dtype)
+    w2 = (jax.random.normal(jax.random.fold_in(key, 2), (r, n))
+          / np.sqrt(r)).astype(dtype)
+    y_ref = ref.lowrank_matmul_ref(x, w1, w2)
+    y_pal = ops.lowrank_matmul(x, w1, w2, use_pallas=True, interpret=True)
+    assert y_pal.shape == (m, n) and y_pal.dtype == x.dtype
+    tol = LOWRANK_TOL[dtype]
+    np.testing.assert_allclose(
+        np.asarray(y_pal, np.float32), np.asarray(y_ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+# (M, K, N) for x @ dequant(wq int8, scale): odd sizes around the
+# bm=128 / bk=256 / bn=256 tiles
+DEQUANT_SHAPES = [
+    (1, 48, 80),             # decode row
+    (100, 260, 130),         # one past bk
+    (31, 127, 255),          # one short of tiles
+    (128, 256, 256),         # aligned control
+]
+DEQUANT_TOL = {jnp.float32: 1e-3, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("x_dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("scale_axis", ["n", "k"])
+@pytest.mark.parametrize("shape", DEQUANT_SHAPES)
+def test_dequant_matmul_parity(shape, scale_axis, x_dtype):
+    m, k, n = shape
+    key = jax.random.PRNGKey(m * 31 + n)
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(x_dtype)
+    wq = jax.random.randint(jax.random.fold_in(key, 1), (k, n), -127, 128,
+                            jnp.int8)
+    sdim = n if scale_axis == "n" else k
+    sc = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2), (sdim,))) / 100 + 1e-3
+    if scale_axis == "n":
+        y_ref = ref.dequant_matmul_ref(x, wq, sc)
+    else:
+        y_ref = (x.astype(jnp.float32)
+                 @ (wq.astype(jnp.float32) * sc[:, None])).astype(x.dtype)
+    y_pal = ops.dequant_matmul(x, wq, sc, scale_axis=scale_axis,
+                               use_pallas=True, interpret=True)
+    assert y_pal.shape == (m, n) and y_pal.dtype == x.dtype
+    tol = DEQUANT_TOL[x_dtype]
+    np.testing.assert_allclose(
+        np.asarray(y_pal, np.float32), np.asarray(y_ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_lowrank_matmul_batched_odd_leading_dims():
+    """Leading batch dims fold into M; odd (B, S) exercises the fold+pad."""
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (3, 7, 96), jnp.bfloat16)
+    w1 = (jax.random.normal(jax.random.fold_in(key, 1), (96, 24)) / 8
+          ).astype(jnp.bfloat16)
+    w2 = (jax.random.normal(jax.random.fold_in(key, 2), (24, 40)) / 4
+          ).astype(jnp.bfloat16)
+    y = ops.lowrank_matmul(x, w1, w2, use_pallas=True, interpret=True)
+    assert y.shape == (3, 7, 40) and y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32),
+        np.asarray(ref.lowrank_matmul_ref(x, w1, w2), np.float32),
+        atol=3e-2, rtol=3e-2)

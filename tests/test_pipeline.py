@@ -33,8 +33,8 @@ def test_pipeline_matches_sequential():
     for s in range(n_stages):
         ref = stage_fn(ref, ws[s])
 
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import _make_mesh
+    mesh = _make_mesh((4,), ("stage",))
     out = pipeline_forward(stage_fn, ws, xm, mesh)
     out_flat = out.reshape(8, 4, d)
     err = float(jnp.abs(out_flat - ref).max())

@@ -1,0 +1,198 @@
+"""Tensor-parallel sharded serving parity, exercised in subprocesses under
+XLA_FLAGS=--xla_force_host_platform_device_count=N (the main pytest process
+keeps 1 device, per the dry-run isolation rule — same recipe as
+test_collectives_multidev.py; docs/parallel.md documents it).
+
+The contract being pinned: a `ContinuousEngine` (and the fused one-shot
+loop) on a (data=2, model=2) mesh emits tokens BITWISE-identical to the
+single-device engine — sharding changes layouts and collective schedules,
+never tokens — with exactly one compile per engine callable across every
+admit/retire boundary, on all three decoder templates, from both in-memory
+params and a saved-artifact load."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=560,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+_ENGINE_PARITY = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import smoke_config
+from repro.models import build
+from repro.serving import ContinuousEngine, VirtualClock, poisson_trace
+from repro.launch.mesh import make_host_mesh
+
+arch = {arch!r}
+cfg = smoke_config(arch)
+bundle = build(cfg)
+params = bundle.init(jax.random.PRNGKey(0))
+# staggered arrivals + heterogeneous lengths so admissions land mid-decode
+trace = lambda: poisson_trace(6, 150.0, vocab_size=cfg.vocab_size,
+                              prompt_lens=(6, 10), gen_lens=(4, 8), seed=3)
+
+def run(mesh):
+    eng = ContinuousEngine(bundle, params, num_slots=2, max_len=48, chunk=4,
+                           cache_dtype=jnp.float32, clock=VirtualClock(),
+                           mesh=mesh)
+    res = eng.run(trace())
+    # zero recompiles across every admit/retire boundary: ONE executable each
+    # for the chunk loop and the slot insert over the engine's lifetime
+    # (prefill legitimately compiles once per distinct prompt length — 2 here)
+    assert eng._chunk_fn._cache_size() == 1, eng._chunk_fn._cache_size()
+    assert eng._insert._cache_size() == 1, eng._insert._cache_size()
+    assert eng._prefill._cache_size() <= 2, eng._prefill._cache_size()
+    return {{rid: t.tolist() for rid, (t, _) in res.items()}}
+
+base = run(None)
+mesh = make_host_mesh(2, 2)
+shard = run(mesh)
+assert base == shard, (base, shard)
+
+# fused one-shot loop through the same mesh
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab_size)
+t0, _ = bundle.generate(params, prompt, 8, cache_dtype=jnp.float32)
+t1, _ = bundle.generate(params, prompt, 8, cache_dtype=jnp.float32, mesh=mesh)
+np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+print("parity ok", arch, jax.device_count())
+"""
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b", "zamba2-2.7b"])
+def test_sharded_engine_matches_single_device(arch):
+    out = _run(_ENGINE_PARITY.format(arch=arch))
+    assert f"parity ok {arch} 4" in out
+
+
+_ARTIFACT_PARITY = """
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+import repro
+from repro.configs import smoke_config
+from repro.models import build
+from repro.serving import ContinuousEngine, VirtualClock, poisson_trace
+from repro.launch.mesh import make_host_mesh
+
+arch = {arch!r}
+cfg = smoke_config(arch)
+bundle = build(cfg)
+params = bundle.init(jax.random.PRNGKey(0))
+calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0, cfg.vocab_size)
+         for i in range(2)]
+art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap", calib=calib)
+d = tempfile.mkdtemp()
+art.save(d)
+trace = lambda: poisson_trace(5, 150.0, vocab_size=cfg.vocab_size,
+                              prompt_lens=(6, 10), gen_lens=(4, 8), seed=7)
+
+def run(mesh):
+    # directory load: with a mesh, every factor leaf is restored straight
+    # onto its TP shard (artifacts/artifact.py load(mesh=...))
+    eng = ContinuousEngine.from_artifact(d, params=params, num_slots=2,
+                                         max_len=48, chunk=4,
+                                         cache_dtype=jnp.float32,
+                                         clock=VirtualClock(), mesh=mesh)
+    res = eng.run(trace())
+    assert eng._chunk_fn._cache_size() == 1, eng._chunk_fn._cache_size()
+    return {{rid: t.tolist() for rid, (t, _) in res.items()}}
+
+base = run(None)
+shard = run(make_host_mesh(2, 2))
+assert base == shard, (base, shard)
+print("artifact parity ok", arch)
+"""
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b", "zamba2-2.7b"])
+def test_sharded_engine_from_artifact_matches_single_device(arch):
+    out = _run(_ARTIFACT_PARITY.format(arch=arch))
+    assert f"artifact parity ok {arch}" in out
+
+
+def test_sharded_factor_load_places_leaves_on_mesh():
+    """load(mesh=...) must put factor leaves on NamedShardings derived from
+    the matrix names — w2 of a column-parallel owner TP-sharded over "model"
+    — and apply(mesh=...) must return a fully mesh-resident servable tree."""
+    _run("""
+    import tempfile
+    import jax, jax.numpy as jnp
+    import repro
+    from repro.artifacts import load_artifact
+    from repro.configs import smoke_config
+    from repro.models import build
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import sharding as shardlib
+
+    cfg = smoke_config("olmo-1b")
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0,
+                                cfg.vocab_size) for i in range(2)]
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+    d = tempfile.mkdtemp()
+    art.save(d)
+
+    mesh = make_host_mesh(2, 2)
+    art2 = load_artifact(d, mesh=mesh)
+    specs = shardlib.factor_specs(
+        {name: dict(fd) for name, fd in art2.factors.items()})
+    from jax.sharding import PartitionSpec as P
+    col = next(n for n in art2.factors if n.endswith(".wq"))
+    assert specs[col]["w2"] == P(None, "model"), specs[col]["w2"]
+    for name, fd in art2.factors.items():
+        for leaf, arr in fd.items():
+            assert arr.sharding.mesh == mesh, (name, leaf, arr.sharding)
+
+    servable = art2.apply(params, mesh=mesh)
+    for leaf in jax.tree.leaves(servable):
+        assert leaf.sharding.mesh == mesh, leaf.sharding
+    print("factor placement ok")
+    """)
+
+
+def test_from_artifact_rejects_mismatched_base_params():
+    """The validation satellite: a wrong base-params checkpoint must fail
+    fast with the offending path, not deep inside apply with a shape error."""
+    _run("""
+    import tempfile
+    import jax
+    import repro
+    from repro.configs import smoke_config
+    from repro.models import build
+    from repro.serving import ContinuousEngine
+
+    cfg = smoke_config("olmo-1b")
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    calib = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0,
+                                cfg.vocab_size) for i in range(2)]
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+
+    wrong = build(smoke_config("gemma3-4b")).init(jax.random.PRNGKey(0))
+    try:
+        ContinuousEngine.from_artifact(art, params=wrong, num_slots=1,
+                                       max_len=48)
+    except ValueError as e:
+        assert "do not match artifact config" in str(e), e
+    else:
+        raise AssertionError("mismatched base params were not rejected")
+    print("mismatch rejected ok")
+    """, devices=1)

@@ -1,0 +1,118 @@
+"""Legacy-entry-point shims: each must emit EXACTLY one DeprecationWarning
+per use and delegate to the canonical surface with identical results.
+
+Covered shims (one per pre-artifact API that PR 3 superseded):
+  * `models.compression.compress_model_params` — the two-step wrapper over
+    compress_model_factors + rebuild_params (canonical: `repro.compress`).
+  * `launch.rank_train.run(...)` unpacked as the legacy positional 4-tuple
+    (canonical: the `RankTrainResult` attributes).
+  * `launch.serve.generate` — the old free function that shadowed
+    `ModelBundle.generate` (canonical: `generate_tokens`).
+
+CI runs this file under `-W error::DeprecationWarning` as well: the
+delegation paths themselves must be warning-clean — every block below that
+EXPECTS a warning captures it explicitly, so a stray second warning (or a
+warning from the canonical path) fails either way.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from conftest import build_smoke, calib_batches
+
+
+def _exactly_one_deprecation(record):
+    deps = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, [str(w.message) for w in deps]
+    return deps[0]
+
+
+def test_compress_model_params_warns_once_and_delegates():
+    cfg, bundle, params = build_smoke("olmo-1b")
+    calib = list(calib_batches("olmo-1b"))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        from repro.models.compression import compress_model_params
+        cparams, kmap = compress_model_params(params, cfg, calib, 0.5,
+                                              method="dobi_noremap",
+                                              quantize=False)
+    w = _exactly_one_deprecation(rec)
+    assert "repro.compress" in str(w.message)
+
+    # delegation: identical ranks AND identical servable tokens vs the
+    # canonical artifact path
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=calib)
+    assert kmap == art.report.ks
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0,
+                                cfg.vocab_size)
+    t_legacy, _ = bundle.generate(cparams, prompt, 6, cache_dtype=jnp.float32)
+    t_canon, _ = bundle.generate(art.apply(params), prompt, 6,
+                                 cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(t_legacy), np.asarray(t_canon))
+
+
+def test_rank_train_tuple_unpack_warns_once_and_delegates():
+    from repro.launch.rank_train import run as rank_train_run, RankTrainResult
+
+    cfg, bundle, params = build_smoke("olmo-1b")
+    # building the structured result itself must not warn
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        res = rank_train_run(cfg, ratio=0.5, steps=2, batch=2, seq=12,
+                             svd_rank_cap=8, params=params)
+    assert isinstance(res, RankTrainResult)
+    assert set(res.soft_ks) == set(res.names)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        core_res, soft_ks, p, b = res
+    w = _exactly_one_deprecation(rec)
+    assert "4-tuple" in str(w.message)
+    assert core_res is res.core
+    assert soft_ks == res.soft_ks
+    assert p is params and b is res.bundle
+
+
+def test_serve_generate_warns_once_and_delegates():
+    from repro.launch import serve as serve_mod
+
+    cfg, bundle, params = build_smoke("olmo-1b")
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        t_old, _ = serve_mod.generate(bundle, params, prompt, 4,
+                                      cache_dtype=jnp.float32)
+    w = _exactly_one_deprecation(rec)
+    assert "generate_tokens" in str(w.message)
+
+    # the canonical surface is warning-clean and produces identical tokens
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        t_new, _ = serve_mod.generate_tokens(bundle, params, prompt, 4,
+                                             cache_dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(t_old), np.asarray(t_new))
+
+
+def test_shims_warn_on_every_use_not_just_first():
+    """The shims use warnings.warn defaults except that pytest/CI may reset
+    filters; pin that a SECOND use in the same process still warns under
+    simplefilter('always') — the contract is per-use, not per-process."""
+    from repro.launch import serve as serve_mod
+
+    cfg, bundle, params = build_smoke("olmo-1b")
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0,
+                                cfg.vocab_size)
+    for _ in range(2):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            serve_mod.generate(bundle, params, prompt, 2,
+                               cache_dtype=jnp.float32)
+        _exactly_one_deprecation(rec)
