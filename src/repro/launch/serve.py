@@ -145,32 +145,60 @@ def generate(*args, **kwargs):
 
 
 def run_traffic(bundle, params, args, cfg, mesh=None):
-    """Replay a Poisson arrival trace through the continuous-batching engine.
+    """Replay a Poisson arrival trace through the continuous-batching engine,
+    supervised for graceful drain / failure injection (serving/supervisor.py).
 
     Per-request stats throughout: the printed decode tok/s is the MEAN OF
     PER-REQUEST throughputs (each request's tokens over its own first-token →
     retirement span), not tokens-over-makespan for the whole batch — so it
     stays comparable with the single-request decode_tok_per_s figures in
     BENCH_decode.json regardless of how many requests shared the pool.
+
+    A SIGTERM/SIGINT mid-replay triggers a graceful drain: admission stops,
+    in-flight slots finish (bounded by --drain-timeout), and finished results
+    plus the pending queue are flushed to --drain-dir as a resumable snapshot
+    (`--resume DIR` picks it back up losslessly). The process still exits 0 —
+    a preemption is not an error.
     """
-    from repro.serving import ContinuousEngine, VirtualClock, WallClock, poisson_trace
-    from repro.serving.engine import summarize
+    import contextlib
+
+    from repro.runtime import MetricsLogger, PreemptionGuard
+    from repro.serving import (ContinuousEngine, FailureInjection,
+                               ServingSupervisor, VirtualClock, WallClock,
+                               load_snapshot, poisson_trace)
 
     g = args.gen_len
-    trace = poisson_trace(
-        args.traffic, args.arrival_rate, vocab_size=cfg.vocab_size,
-        prompt_lens=(max(4, args.prompt_len // 2), args.prompt_len),
-        gen_lens=tuple(sorted({max(1, g // 4), max(1, g // 2), g})),
-        seed=0)
+    prior_results = {}
+    if args.resume:
+        prior_results, trace, prior_rejected = load_snapshot(args.resume)
+        print(f"[serve] resume: {len(trace)} pending requests from "
+              f"{args.resume} ({len(prior_results)} finished before the "
+              f"drain, {len(prior_rejected)} rejected)")
+    else:
+        trace = poisson_trace(
+            args.traffic, args.arrival_rate, vocab_size=cfg.vocab_size,
+            prompt_lens=(max(4, args.prompt_len // 2), args.prompt_len),
+            gen_lens=tuple(sorted({max(1, g // 4), max(1, g // 2), g})),
+            seed=0)
     max_len = args.prompt_len + g + args.chunk + 8
     clock = VirtualClock() if args.virtual_clock else WallClock()
     engine = ContinuousEngine(
         bundle, params, num_slots=args.num_slots, max_len=max_len,
         chunk=args.chunk, eos_id=args.eos_id,
         cache_dtype=jnp.dtype(cfg.dtype), temperature=args.temperature,
-        clock=clock, mesh=mesh)
-    results = engine.run(trace)
-    agg = summarize(results)
+        clock=clock, mesh=mesh, max_queue=args.max_queue)
+    inject = tuple(FailureInjection.parse(s) for s in args.inject_failure)
+    guard = PreemptionGuard()       # live SIGTERM/SIGINT → graceful drain
+    with contextlib.ExitStack() as stack:
+        stack.callback(guard.restore)
+        metrics = (stack.enter_context(MetricsLogger(args.metrics))
+                   if args.metrics else None)
+        sup = ServingSupervisor(
+            engine, guard=guard, drain_dir=args.drain_dir,
+            drain_timeout=args.drain_timeout, metrics=metrics,
+            max_retries=args.max_retries, inject=inject)
+        results = sup.serve(trace)
+    agg = engine.summarize()
     print(f"[serve] continuous: {agg['requests']} requests in "
           f"{agg['span_s']:.2f}s engine-clock "
           f"({agg['requests_per_s']:.2f} req/s, {engine.chunks_run} chunks)")
@@ -180,8 +208,20 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
           f"TTFT mean {agg['ttft_mean_s']*1e3:.0f} ms")
     print(f"[serve]   per-request decode mean {agg['decode_tok_per_s_mean']:.1f} tok/s "
           f"({agg['new_tokens_total']} tokens total)")
-    first = results[trace[0].rid][0]
-    print("[serve] sample:", first[:12].tolist())
+    if agg["rejected"] or agg["requeued"] or sup.recoveries:
+        print(f"[serve]   rejected {agg['rejected']}  requeued "
+              f"{agg['requeued']}  recoveries {sup.recoveries}")
+    if sup.drained:
+        print(f"[serve] drained: {len(results)} finished, "
+              f"{len(sup.snapshot['pending'])} pending flushed"
+              + (f" to {sup.snapshot_path}" if sup.snapshot_path else
+                 " (no --drain-dir: snapshot not persisted)"))
+    done = [r for r in trace if r.rid in results]
+    if done:
+        print("[serve] sample:", results[done[0].rid][0][:12].tolist())
+    elif prior_results:
+        rid = sorted(prior_results)[0]
+        print("[serve] sample:", prior_results[rid][0][:12].tolist())
     return agg
 
 
@@ -223,6 +263,36 @@ def main(argv=None):
     ap.add_argument("--virtual-clock", action="store_true",
                     help="--traffic: compute-time virtual clock (no sleeps; "
                          "reproducible) instead of wall clock")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="--traffic admission control: max requests waiting "
+                         "for a slot; arrivals beyond it are rejected with "
+                         "reason 'queue_full' (default unbounded)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="--traffic: requeue attempts per request after a "
+                         "device-loss recovery before rejecting it")
+    ap.add_argument("--metrics", default="", metavar="PATH",
+                    help="--traffic: per-chunk JSONL serving metrics (queue "
+                         "depth, occupancy, admits/retires/rejects, chunk "
+                         "latency) via runtime.MetricsLogger")
+    ap.add_argument("--drain-dir", default=None, metavar="DIR",
+                    help="--traffic: where a graceful drain (SIGTERM/SIGINT "
+                         "or --inject-failure preempt) flushes its resumable "
+                         "snapshot (results + pending queue)")
+    ap.add_argument("--drain-timeout", type=float, default=None, metavar="S",
+                    help="--traffic: engine-clock seconds to keep decoding "
+                         "in-flight slots after a drain begins; slots still "
+                         "running at the deadline are snapshotted for "
+                         "recompute-from-prompt (default: finish all)")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="--traffic: resume a drained run from DIR's "
+                         "snapshot instead of generating a fresh trace; "
+                         "serves the pending queue losslessly")
+    ap.add_argument("--inject-failure", action="append", default=[],
+                    metavar="KIND@CHUNK[:SURVIVORS]",
+                    help="--traffic fault injection (repeatable): "
+                         "'preempt@3' triggers a drain at chunk 3; "
+                         "'device_loss@5:2' shrinks the mesh to 2 surviving "
+                         "devices at chunk 5 and requeues in-flight requests")
     ap.add_argument("--mesh", default=None, metavar="DP,TP",
                     help="serve tensor/data-parallel over a (data=DP, "
                          "model=TP) device mesh — params TP over 'model', "
@@ -302,7 +372,7 @@ def main(argv=None):
                 print(f"[serve] artifact saved to {args.save_artifact} "
                       f"({art.nbytes()/2**20:.2f} MiB of factors)")
 
-    if args.traffic > 0:
+    if args.traffic > 0 or args.resume:
         return run_traffic(bundle, params, args, cfg, mesh=mesh)
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),

@@ -16,6 +16,7 @@ initialized from the TPU environment by launch/scripts/pod_train.sh).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -81,34 +82,37 @@ def main(argv=None):
     )
     guard = PreemptionGuard()
     hb = HeartbeatMonitor(n_nodes=jax.process_count())
-    metrics = MetricsLogger(args.metrics) if args.metrics else None
 
     losses = []
     t_last = time.monotonic()
-    for step, batch in prefetch:
-        if step >= args.steps or guard.should_stop():
-            break
-        lr_scale = schedules.linear_warmup_cosine(
-            step, warmup_steps=args.warmup, total_steps=args.steps)
-        # lr folded via ocfg.lr; scale applied inside update call
-        params, opt_state, loss = train_step(params, opt_state, batch)
-        losses.append(float(loss))
-        dt = time.monotonic() - t_last
-        t_last = time.monotonic()
-        hb.beat(jax.process_index(), dt)
-        if metrics:
-            metrics.log(step, loss=float(loss), step_time_s=dt,
-                        lr_scale=float(lr_scale))
-        if step % 10 == 0:
-            print(f"step {step:5d} loss {float(loss):.4f} ({dt*1e3:.0f} ms)")
-        if ckpt and step > 0 and step % args.ckpt_every == 0:
-            ckpt.save(step, {"p": params, "o": opt_state}, blocking=False)
+    # MetricsLogger is a context manager: the log closes on ANY exit path
+    # (preemption break, checkpoint failure, KeyboardInterrupt), same as the
+    # serving supervisor's usage in launch/serve.py
+    with contextlib.ExitStack() as stack:
+        metrics = (stack.enter_context(MetricsLogger(args.metrics))
+                   if args.metrics else None)
+        for step, batch in prefetch:
+            if step >= args.steps or guard.should_stop():
+                break
+            lr_scale = schedules.linear_warmup_cosine(
+                step, warmup_steps=args.warmup, total_steps=args.steps)
+            # lr folded via ocfg.lr; scale applied inside update call
+            params, opt_state, loss = train_step(params, opt_state, batch)
+            losses.append(float(loss))
+            dt = time.monotonic() - t_last
+            t_last = time.monotonic()
+            hb.beat(jax.process_index(), dt)
+            if metrics:
+                metrics.log(step, loss=float(loss), step_time_s=dt,
+                            lr_scale=float(lr_scale))
+            if step % 10 == 0:
+                print(f"step {step:5d} loss {float(loss):.4f} ({dt*1e3:.0f} ms)")
+            if ckpt and step > 0 and step % args.ckpt_every == 0:
+                ckpt.save(step, {"p": params, "o": opt_state}, blocking=False)
 
-    if ckpt:
-        ckpt.save(step, {"p": params, "o": opt_state}, blocking=True)
-    prefetch.close()
-    if metrics:
-        metrics.close()
+        if ckpt:
+            ckpt.save(step, {"p": params, "o": opt_state}, blocking=True)
+        prefetch.close()
     print(f"[train] done: first loss {losses[0]:.4f} → last {losses[-1]:.4f}")
     return losses
 

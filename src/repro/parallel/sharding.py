@@ -261,6 +261,43 @@ def cache_spec(cache: Any, mesh: Mesh, cfg, *, seq_shard: bool = False) -> Any:
     return jax.tree.map(spec, cache)
 
 
+def prune_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding axes a concrete leaf cannot honor on `mesh`.
+
+    The elastic-shrink respec: specs are written for the mesh a model was
+    *compressed/launched* on, but after a device loss the surviving mesh's
+    axis sizes change — a low-rank factor's k or d_out, or a KV head count,
+    that divided the old "model" axis may not divide the new one. Any dim
+    whose size does not divide the product of its mesh axes degrades to
+    replicated (None) instead of erroring in device_put/pjit; divisible dims
+    keep their spec, so a clean shrink (tp 4 → 2) stays fully sharded.
+    """
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        div = 1
+        for a in axes:
+            div *= mesh.shape.get(a, 1)
+        dim = shape[i] if i < len(shape) else 0
+        out.append(entry if div > 0 and dim % div == 0 and dim >= div else None)
+    return P(*out)
+
+
+def prune_specs(spec_tree: Any, tree: Any, mesh: Mesh) -> Any:
+    """`prune_spec` over a (spec pytree, array pytree) pair — the respec pass
+    the serving engine runs before placing params on a (possibly shrunk)
+    mesh (`serving/engine.py:reshard_to`, `runtime/elastic.py:reshard_state`)."""
+    flat_specs, treedef = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_leaves = treedef.flatten_up_to(tree)
+    pruned = [prune_spec(s, tuple(l.shape), mesh)
+              for s, l in zip(flat_specs, flat_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, pruned)
+
+
 def make_sharding(mesh: Mesh, spec_tree: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

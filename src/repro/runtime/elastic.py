@@ -1,12 +1,15 @@
 """Elastic scaling: rebuild the mesh for the devices that are actually alive
-and reshard the training state onto it.
+and reshard the training or serving state onto it.
 
 Real flow on a pod: jax.distributed re-initializes after a node failure with
 a smaller process set → `choose_mesh_shape` picks the largest valid
 (data, model) grid → `reshard_state` device_puts the committed checkpoint
 onto the new shardings (the checkpointer stores full arrays, so any target
 topology works). On CPU we exercise the same code paths with
-xla_force_host_platform_device_count (see tests/test_elastic.py).
+xla_force_host_platform_device_count — see
+tests/test_collectives_multidev.py:test_elastic_restart_resharding
+(checkpoint→shrunk-mesh restore) and tests/test_fault_tolerance_multidev.py
+(live serving-pool shrink via serving/supervisor.py).
 """
 
 from __future__ import annotations
@@ -40,7 +43,14 @@ def make_mesh_for_devices(devices=None, *, model_parallel: int = 1) -> Mesh:
 
 
 def reshard_state(state: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
-    """device_put a (host or differently-sharded) state onto `mesh`."""
-    specs = shardlib.param_specs(state, fsdp=fsdp)
+    """device_put a (host or differently-sharded) state onto `mesh`.
+
+    Serving callers pass fsdp=False (params replicated over data, TP over
+    "model"). Specs are pruned against the target mesh
+    (`sharding.prune_specs`): a dim that divided the old topology but not
+    the survivors' degrades to replicated instead of erroring.
+    """
+    specs = shardlib.prune_specs(
+        shardlib.param_specs(state, fsdp=fsdp), state, mesh)
     shardings = shardlib.make_sharding(mesh, specs)
     return jax.tree.map(jax.device_put, state, shardings)

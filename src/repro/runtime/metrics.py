@@ -1,4 +1,14 @@
-"""JSONL metrics logger (one line per step; cheap, greppable, restart-safe)."""
+"""JSONL metrics logger (one line per step; cheap, greppable, restart-safe).
+
+Context manager so every launcher closes it on any exit path:
+
+    with MetricsLogger(path) as metrics:
+        metrics.log(step, loss=..., step_time_s=...)
+
+`train.py` logs per training step; `serve.py --metrics PATH` logs per decode
+chunk through the serving supervisor (queue depth, occupancy, admits /
+retires / rejects, chunk latency — docs/serving.md §Failure handling).
+"""
 
 from __future__ import annotations
 
@@ -19,4 +29,12 @@ class MetricsLogger:
         self._f.write(json.dumps(rec) + "\n")
 
     def close(self) -> None:
-        self._f.close()
+        if not self._f.closed:
+            self._f.close()
+
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False

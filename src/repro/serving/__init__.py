@@ -5,20 +5,33 @@ engine: a `RequestQueue` feeds a fixed pool of KV-cache slots owned by a
 `SlotManager`; the `ContinuousEngine` decodes all slots in chunked compiled
 scans, retiring EOS/length-capped requests and admitting queued ones at chunk
 boundaries — a single long request no longer stalls the whole batch.
+
+`ServingSupervisor` (supervisor.py) wraps the engine with the production
+failure story: SIGTERM graceful drain with a resumable queue snapshot,
+elastic device-loss recovery (shrink the mesh, reshard, requeue), and the
+admission-control knobs (`max_queue`, per-request deadlines) the engine
+enforces — docs/serving.md §Failure handling.
 """
 
 from repro.serving.engine import ContinuousEngine
-from repro.serving.request import Request, RequestQueue, RequestStats
+from repro.serving.request import (AdmissionError, Request, RequestQueue,
+                                   RequestStats)
 from repro.serving.slots import SlotManager
+from repro.serving.supervisor import (FailureInjection, ServingSupervisor,
+                                      load_snapshot)
 from repro.serving.traffic import VirtualClock, WallClock, poisson_trace
 
 __all__ = [
+    "AdmissionError",
     "ContinuousEngine",
+    "FailureInjection",
     "Request",
     "RequestQueue",
     "RequestStats",
+    "ServingSupervisor",
     "SlotManager",
     "VirtualClock",
     "WallClock",
+    "load_snapshot",
     "poisson_trace",
 ]

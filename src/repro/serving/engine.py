@@ -33,6 +33,7 @@ arrays.
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Callable, Iterable
 
 import jax
@@ -42,7 +43,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.generate import get_engine, select_token_per_slot
 from repro.parallel import sharding as shardlib
-from repro.serving.request import Request, RequestQueue, RequestStats
+from repro.serving.request import (AdmissionError, Request, RequestQueue,
+                                   RequestStats)
 from repro.serving.slots import SlotManager
 from repro.serving.traffic import WallClock
 
@@ -93,7 +95,7 @@ class ContinuousEngine:
     def __init__(self, bundle, params, *, num_slots: int, max_len: int,
                  chunk: int = 8, eos_id: int | None = None,
                  cache_dtype=jnp.bfloat16, temperature: float = 0.0,
-                 rng=None, clock=None, mesh=None):
+                 rng=None, clock=None, mesh=None, max_queue: int | None = None):
         cfg = bundle.cfg
         if cfg.is_encoder_decoder or cfg.family in ("audio", "vlm"):
             raise NotImplementedError(
@@ -106,11 +108,15 @@ class ContinuousEngine:
         if mesh is not None:
             # one sharding tree, reused for placement AND the pinned
             # in_shardings below; device_put is a no-op for leaves already
-            # placed by a with_artifact(mesh=...) load
+            # placed by a with_artifact(mesh=...) load. Specs are pruned
+            # against the mesh so a leaf whose dim stopped dividing an axis
+            # (elastic shrink) degrades to replicated instead of erroring.
             self._param_sharding = shardlib.make_sharding(
-                mesh, shardlib.param_specs(params, fsdp=False))
+                mesh, shardlib.prune_specs(
+                    shardlib.param_specs(params, fsdp=False), params, mesh))
             params = jax.device_put(params, self._param_sharding)
         self.params = params
+        self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
         self.eos_id = eos_id
@@ -119,6 +125,21 @@ class ContinuousEngine:
         self.do_sample = self.temperature > 0.0
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.clock = clock if clock is not None else WallClock()
+        # ---- admission control (docs/serving.md §Failure handling) --------
+        # `queue` holds the clock-gated future (traffic replay trace);
+        # `waiting` is the bounded backlog of requests that have ARRIVED but
+        # found no free slot. Overload is decided at arrival time: an arrival
+        # that finds `max_queue` requests already waiting is rejected with
+        # reason "queue_full" — recorded in `rejected`, never silently
+        # dropped. `draining` freezes admission entirely (graceful drain).
+        self.max_queue = max_queue
+        self.waiting: deque[Request] = deque()
+        self.rejected: dict[int, str] = {}
+        self.draining = False
+        self.admitted = 0
+        self.retired = 0
+        self.requeued = 0
+        self._on_reject: Callable | None = None
 
         # get_engine: the same cached GenerationEngine that bundle.generate
         # uses, so admission prefill shares its jitted (donated) prefill and
@@ -228,23 +249,61 @@ class ContinuousEngine:
         The pool cache, compiled callables, and scratch buffer are kept, so a
         repeat run pays no compiles (benchmark warm-up passes use this). Only
         valid when fully drained."""
-        if self.slots.num_active or self.queue:
+        if self.slots.num_active or self.queue or self.waiting:
             raise RuntimeError("reset() with requests still in flight")
         self.results = {}
+        self.rejected = {}
         self.chunks_run = 0
+        self.admitted = self.retired = self.requeued = 0
+        self.draining = False
         self.clock = clock
 
     # ---- submission -------------------------------------------------------
     def submit(self, request: Request) -> None:
         """Enqueue a request; it becomes schedulable once the engine clock
-        reaches its `arrival_time`."""
+        reaches its `arrival_time`. Raises `AdmissionError` (a ValueError)
+        with a machine-readable reason — and records it in `self.rejected` —
+        for requests the engine will never serve: structurally oversized, or
+        submitted while draining."""
+        if self.draining:
+            raise self._reject(request, "draining")
         start = self.gen.start_length(len(request.prompt))
         if start + request.max_new_tokens + self.chunk > self.max_len:
-            raise ValueError(
-                f"request {request.rid}: prompt {len(request.prompt)} + "
-                f"max_new_tokens {request.max_new_tokens} + chunk slack "
-                f"{self.chunk} exceeds max_len {self.max_len}")
+            raise self._reject(
+                request, "oversized",
+                f"prompt {len(request.prompt)} + max_new_tokens "
+                f"{request.max_new_tokens} + chunk slack {self.chunk} "
+                f"exceeds max_len {self.max_len}")
         self.queue.push(request)
+
+    def requeue(self, request: Request, *, max_retries: int = 2,
+                backoff_s: float = 0.05) -> bool:
+        """Re-enqueue an interrupted request for recompute-from-prompt (the
+        supervisor calls this after eviction on device loss or drain-timeout
+        restore). Bounded retry: attempt `retries+1` is scheduled
+        `backoff_s * 2**retries` engine-seconds out; past `max_retries` the
+        request is rejected with reason "retries_exhausted" instead of
+        looping forever. Returns True if requeued. Replay is lossless: the
+        per-request (seed, position) sampling keys make the recomputed
+        tokens a bitwise match for anything already streamed."""
+        if request.retries >= max_retries:
+            self._reject(request, "retries_exhausted")
+            return False
+        request.arrival_time = self.clock.now() + backoff_s * (2 ** request.retries)
+        request.retries += 1
+        self.queue.push(request)
+        self.requeued += 1
+        return True
+
+    def _reject(self, request: Request, reason: str,
+                detail: str = "") -> AdmissionError:
+        """Record a rejection (never silently dropped) and build the error —
+        callers on the raising path `raise` the return value, scheduler-side
+        callers just drop it."""
+        self.rejected[request.rid] = reason
+        if self._on_reject is not None:
+            self._on_reject(request, reason)
+        return AdmissionError(request.rid, reason, detail)
 
     # ---- lifecycle steps --------------------------------------------------
     def _admit(self, request: Request, slot: int) -> None:
@@ -285,21 +344,60 @@ class ContinuousEngine:
         self.clock.advance(time.perf_counter() - t0)
         stats.first_token_time = self.clock.now()
         self.slots.admit(slot, request, stats, tok0, start)
+        self.admitted += 1
         if request.on_token is not None:
             request.on_token(request, tok0)
         if request.max_new_tokens == 1 or (self.eos_id is not None
                                            and tok0 == self.eos_id):
             self._retire(slot)
 
-    def _try_admit(self) -> None:
+    def _expiry_reason(self, request: Request, now: float) -> str | None:
+        if request.deadline is not None and now > request.deadline:
+            return "deadline_exceeded"
+        if (request.max_queue_wait is not None
+                and now - request.arrival_time > request.max_queue_wait):
+            return "queue_wait_exceeded"
+        return None
+
+    def _pump_arrivals(self) -> None:
+        """Move clock-arrived requests from the trace queue into the bounded
+        waiting backlog, rejecting at arrival when the backlog is full, and
+        expire waiting requests whose deadline/max-queue-wait has passed.
+        Draining engines pump nothing — un-admitted requests stay queued for
+        the drain snapshot."""
+        if self.draining:
+            return
+        now = self.clock.now()
+        # the admission pass right after this pump drains every free slot, so
+        # an arrival burst may exceed `max_queue` by the slots it is about to
+        # fill — the bound is on requests that will actually sit waiting
+        free = self.num_slots - self.slots.num_active
         while True:
+            request = self.queue.pop_arrived(now)
+            if request is None:
+                break
+            if (self.max_queue is not None
+                    and len(self.waiting) >= self.max_queue + free):
+                self._reject(request, "queue_full")
+                continue
+            self.waiting.append(request)
+        if self.waiting:
+            kept = deque()
+            for request in self.waiting:
+                reason = self._expiry_reason(request, now)
+                if reason is None:
+                    kept.append(request)
+                else:
+                    self._reject(request, reason)
+            self.waiting = kept
+
+    def _try_admit(self) -> None:
+        self._pump_arrivals()
+        while self.waiting:
             slot = self.slots.free_slot()
             if slot is None:
                 return
-            request = self.queue.pop_arrived(self.clock.now())
-            if request is None:
-                return
-            self._admit(request, slot)
+            self._admit(self.waiting.popleft(), slot)
 
     def _step_chunk(self) -> None:
         s = self.slots
@@ -330,8 +428,51 @@ class ContinuousEngine:
         request, stats, tokens = self.slots.retire(slot)
         stats.finish_time = self.clock.now()
         self.results[request.rid] = (tokens, stats)
+        self.retired += 1
         if self._on_finish is not None:
             self._on_finish(request, tokens, stats)
+
+    # ---- fault tolerance (serving/supervisor.py drives these) -------------
+    def has_work(self) -> bool:
+        return bool(self.queue or self.waiting or self.slots.num_active)
+
+    def evict_active(self) -> list[Request]:
+        """Pull every in-flight request out of its slot, discarding partial
+        decode state (the KV in those slots is gone after a device loss, and
+        a drain timeout abandons it on purpose). Returns the evicted requests
+        for requeue/snapshot — recompute-from-prompt replays their tokens
+        bitwise, so nothing already streamed is contradicted."""
+        evicted = []
+        for slot in self.slots.active_slots():
+            request, _stats, _tokens = self.slots.retire(slot)
+            evicted.append(request)
+        return evicted
+
+    def reshard_to(self, mesh) -> None:
+        """Rebuild the engine onto `mesh` after an elastic topology change
+        (device loss → a smaller surviving mesh). Every in-flight request
+        must have been evicted first (`evict_active`). Params are resharded
+        with `jax.device_put` under pruned serving specs, the compiled
+        callables are re-pinned against the new mesh, and the slot pool +
+        scratch cache are reallocated on it — the old pool's KV is
+        unrecoverable by definition of the failure, so evicted requests
+        recompute from their prompts."""
+        if self.slots.num_active:
+            raise RuntimeError("reshard_to() with requests still in slots")
+        self.mesh = mesh
+        self._param_sharding = shardlib.make_sharding(
+            mesh, shardlib.prune_specs(
+                shardlib.param_specs(self.params, fsdp=False),
+                self.params, mesh))
+        self.params = jax.device_put(self.params, self._param_sharding)
+        self.gen = get_engine(self.bundle, self.eos_id, mesh)
+        self._build_sharded_fns(self.num_slots)
+        self.pool = self.bundle.init_cache(
+            self.params, self.num_slots, max_len=self.max_len,
+            dtype=self.cache_dtype)
+        self.pool = jax.device_put(self.pool, self._pool_sharding)
+        self._scratch = None
+        self.slots = SlotManager(self.num_slots)
 
     # ---- main loop --------------------------------------------------------
     def run(self, requests: Iterable[Request] = (), *,
@@ -348,7 +489,7 @@ class ContinuousEngine:
         for r in requests:
             self.submit(r)
         self._on_finish = on_finish
-        while self.queue or self.slots.num_active:
+        while self.has_work():
             self._try_admit()
             if self.slots.num_active == 0:
                 nxt = self.queue.next_arrival()
@@ -358,6 +499,16 @@ class ContinuousEngine:
                 continue
             self._step_chunk()
         return self.results
+
+    def summarize(self) -> dict:
+        """`summarize(self.results)` plus this engine's admission-control
+        counters (rejected / requeued / admitted) — the record is well-formed
+        even before anything finished."""
+        agg = summarize(self.results)
+        agg["rejected"] = len(self.rejected)
+        agg["requeued"] = self.requeued
+        agg["admitted"] = self.admitted
+        return agg
 
 
 def summarize(results: dict[int, tuple[np.ndarray, RequestStats]]) -> dict:
@@ -370,7 +521,12 @@ def summarize(results: dict[int, tuple[np.ndarray, RequestStats]]) -> dict:
     """
     stats = [st for _, st in results.values()]
     if not stats:
-        return {"requests": 0}
+        # well-formed empty record: every key a consumer reads exists, zeroed
+        # — a fully-drained/fully-rejected run must not KeyError downstream
+        return {"requests": 0, "span_s": 0.0, "requests_per_s": 0.0,
+                "latency_p50_s": 0.0, "latency_p95_s": 0.0,
+                "queue_wait_mean_s": 0.0, "ttft_mean_s": 0.0,
+                "decode_tok_per_s_mean": 0.0, "new_tokens_total": 0}
     lat = np.array([st.latency_s for st in stats])
     span = max(max(st.finish_time for st in stats)
                - min(st.arrival_time for st in stats), 1e-9)

@@ -16,6 +16,19 @@ from typing import Callable
 import numpy as np
 
 
+class AdmissionError(ValueError):
+    """A request the engine refuses to take on, with a machine-readable
+    `reason` ("queue_full", "draining", "oversized", ...). Subclasses
+    ValueError so pre-admission-control callers that caught structural
+    rejections keep working."""
+
+    def __init__(self, rid: int, reason: str, detail: str = ""):
+        self.rid = rid
+        self.reason = reason
+        super().__init__(f"request {rid} rejected ({reason})"
+                         + (f": {detail}" if detail else ""))
+
+
 @dataclass
 class Request:
     """One generation request.
@@ -29,6 +42,15 @@ class Request:
     sampled output does not depend on batch composition. `on_token` (if set)
     streams each accepted token as `on_token(request, token)` at chunk
     granularity.
+
+    Admission-control knobs (docs/serving.md §Failure handling):
+    `max_queue_wait` bounds the seconds the request may sit arrived-but-
+    unadmitted before the engine rejects it ("queue_wait_exceeded");
+    `deadline` is an absolute engine-clock time after which admitting it is
+    pointless ("deadline_exceeded"). `retries` counts supervisor requeues
+    after a failure — recovery recomputes from the prompt, and the per-
+    request (seed, position) sampling keys make the replayed tokens a
+    bitwise match for anything already streamed.
     """
 
     rid: int
@@ -37,6 +59,9 @@ class Request:
     arrival_time: float = 0.0
     seed: int = 0
     on_token: Callable[["Request", int], None] | None = None
+    deadline: float | None = None
+    max_queue_wait: float | None = None
+    retries: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -44,6 +69,31 @@ class Request:
             raise ValueError(f"request {self.rid}: empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+    def to_json(self) -> dict:
+        """Queue-snapshot form (drain/resume; `on_token` does not survive —
+        a resumed engine re-streams from the prompt)."""
+        return {
+            "rid": self.rid,
+            "prompt": self.prompt.tolist(),
+            "max_new_tokens": self.max_new_tokens,
+            "arrival_time": self.arrival_time,
+            "seed": self.seed,
+            "deadline": self.deadline,
+            "max_queue_wait": self.max_queue_wait,
+            "retries": self.retries,
+        }
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "Request":
+        return cls(rid=int(rec["rid"]),
+                   prompt=np.asarray(rec["prompt"], np.int32),
+                   max_new_tokens=int(rec["max_new_tokens"]),
+                   arrival_time=float(rec.get("arrival_time", 0.0)),
+                   seed=int(rec.get("seed", 0)),
+                   deadline=rec.get("deadline"),
+                   max_queue_wait=rec.get("max_queue_wait"),
+                   retries=int(rec.get("retries", 0)))
 
 
 @dataclass
@@ -94,6 +144,25 @@ class RequestStats:
             "decode_tok_per_s": self.decode_tok_per_s,
         }
 
+    def to_json(self) -> dict:
+        """Raw-field form (drain snapshots): round-trips through `from_json`
+        exactly, unlike `as_dict` which exports only derived metrics."""
+        return {
+            "rid": self.rid,
+            "arrival_time": self.arrival_time,
+            "prompt_len": self.prompt_len,
+            "admit_time": self.admit_time,
+            "first_token_time": self.first_token_time,
+            "finish_time": self.finish_time,
+            "new_tokens": self.new_tokens,
+        }
+
+    @classmethod
+    def from_json(cls, rec: dict) -> "RequestStats":
+        return cls(**{k: rec[k] for k in ("rid", "arrival_time", "prompt_len",
+                                          "admit_time", "first_token_time",
+                                          "finish_time", "new_tokens")})
+
 
 @dataclass(order=True)
 class _Entry:
@@ -126,6 +195,13 @@ class RequestQueue:
 
     def next_arrival(self) -> float | None:
         return self._heap[0].arrival_time if self._heap else None
+
+    def drain(self) -> list[Request]:
+        """Pop everything (arrived or not), arrival-ordered — the queue half
+        of a drain snapshot. The queue is empty afterwards."""
+        out = [e.request for e in sorted(self._heap)]
+        self._heap = []
+        return out
 
     def __len__(self) -> int:
         return len(self._heap)

@@ -1,0 +1,291 @@
+"""Fault-tolerant supervision around `ContinuousEngine`.
+
+The engine (engine.py) assumes a healthy world: every admitted request
+decodes to completion on a fixed device topology. This module wires the
+`runtime/` machinery built for training into that loop so serving survives
+the three production failure shapes (docs/serving.md §Failure handling):
+
+  graceful drain   — a `PreemptionGuard` (SIGTERM/SIGINT → event) is checked
+                     at every chunk boundary. Once it fires the engine stops
+                     admitting, finishes in-flight slots until `drain_timeout`
+                     engine-seconds elapse, then flushes finished results AND
+                     the entire pending queue to a JSON snapshot. A restarted
+                     process resumes from the snapshot losslessly
+                     (`load_snapshot` → serve the pending requests → merge).
+  device loss      — `HeartbeatMonitor.decide() == "restart_elastic"` (or an
+                     injected failure) evicts every in-flight slot, rebuilds
+                     the largest surviving mesh (`elastic.make_mesh_for_
+                     devices`), reshards params under pruned serving specs,
+                     re-pins the engine's compiled callables and reallocates
+                     the slot pool, then requeues the evicted requests for
+                     recompute-from-prompt with bounded exponential-backoff
+                     retry. Replay is bitwise: per-request (seed, position)
+                     sampling keys mean the recomputed tokens match anything
+                     already streamed, and the final tokens match an
+                     uninterrupted run (tests/test_fault_tolerance_multidev).
+  overload         — admission control lives in the engine (`max_queue`,
+                     per-request deadline / max_queue_wait); the supervisor
+                     surfaces the reject/requeue counters per chunk through
+                     `runtime.MetricsLogger`.
+
+Failure *injection* (`FailureInjection`) makes all of this deterministic in
+CI: fire a preemption or lose devices at an exact chunk index, on a virtual
+clock, and assert token-level outcomes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.runtime.failures import HeartbeatMonitor, NodeState
+from repro.runtime.preemption import PreemptionGuard
+from repro.serving.engine import ContinuousEngine
+from repro.serving.request import Request, RequestStats
+
+SNAPSHOT_NAME = "snapshot.json"
+
+
+@dataclass
+class FailureInjection:
+    """Deterministic fault for tests/CI: at chunk index `at_chunk`, fire a
+    `"preempt"` (trigger the guard → graceful drain) or a `"device_loss"`
+    (shrink the engine onto the first `survivors` devices). Parsed from the
+    serve.py `--inject-failure KIND@CHUNK[:SURVIVORS]` flag."""
+
+    kind: str                   # "preempt" | "device_loss"
+    at_chunk: int
+    survivors: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("preempt", "device_loss"):
+            raise ValueError(f"unknown injection kind {self.kind!r}")
+        if self.kind == "device_loss" and self.survivors is None:
+            raise ValueError("device_loss injection needs survivors")
+
+    @classmethod
+    def parse(cls, spec: str) -> "FailureInjection":
+        """"preempt@3" | "device_loss@5:2" → FailureInjection."""
+        try:
+            kind, rest = spec.split("@", 1)
+            chunk, _, surv = rest.partition(":")
+            return cls(kind=kind, at_chunk=int(chunk),
+                       survivors=int(surv) if surv else None)
+        except (ValueError, TypeError) as e:
+            if isinstance(e, ValueError) and "injection" in str(e):
+                raise
+            raise ValueError(
+                f"--inject-failure expects KIND@CHUNK[:SURVIVORS] "
+                f"(e.g. 'preempt@3', 'device_loss@5:2'), got {spec!r}") from e
+
+
+class ServingSupervisor:
+    """Run a `ContinuousEngine` under preemption/failure supervision.
+
+    `guard` defaults to a signal-less `PreemptionGuard` (callers wanting real
+    SIGTERM drain — launch/serve.py — construct one with live signals and
+    `restore()` it afterwards). `monitor` is an optional `HeartbeatMonitor`;
+    when its `decide()` says "restart_elastic" the supervisor performs
+    device-loss recovery with `devices_per_node` surviving devices per
+    healthy node. `metrics` is an optional `runtime.MetricsLogger` fed one
+    record per chunk. `drain_dir` is where a drain flushes its snapshot.
+    """
+
+    def __init__(self, engine: ContinuousEngine, *,
+                 guard: PreemptionGuard | None = None,
+                 monitor: HeartbeatMonitor | None = None,
+                 devices_per_node: int = 1,
+                 drain_dir: str | None = None,
+                 drain_timeout: float | None = None,
+                 metrics=None,
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 inject: tuple[FailureInjection, ...] = ()):
+        self.engine = engine
+        self.guard = guard if guard is not None else PreemptionGuard(signals=())
+        self.monitor = monitor
+        self.devices_per_node = devices_per_node
+        self.drain_dir = drain_dir
+        self.drain_timeout = drain_timeout
+        self.metrics = metrics
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self._pending_injections = sorted(inject, key=lambda i: i.at_chunk)
+        self.recoveries = 0
+        self.drained = False
+        self.snapshot_path: str | None = None
+
+    # ---- failure paths ----------------------------------------------------
+    def _maybe_inject(self) -> None:
+        while (self._pending_injections
+               and self.engine.chunks_run >= self._pending_injections[0].at_chunk):
+            inj = self._pending_injections.pop(0)
+            if inj.kind == "preempt":
+                self.guard.trigger()
+            else:
+                self._recover_device_loss(inj.survivors)
+
+    def _monitor_says_restart(self) -> bool:
+        if self.monitor is None:
+            return False
+        return self.monitor.decide() == "restart_elastic"
+
+    def _surviving_devices(self) -> list:
+        import jax
+        if self.monitor is None:
+            return jax.devices()
+        healthy = [n for n, s in self.monitor.states().items()
+                   if s is not NodeState.DEAD]
+        n = max(1, len(healthy) * self.devices_per_node)
+        return jax.devices()[:n]
+
+    def _recover_device_loss(self, survivors: int | None = None) -> None:
+        """Elastic shrink: evict in-flight slots, rebuild the largest mesh
+        the survivors support (keeping the old TP degree when it divides),
+        reshard + re-pin + reallocate, requeue evicted requests."""
+        import jax
+        from repro.runtime import elastic
+
+        eng = self.engine
+        devices = (jax.devices()[:survivors] if survivors is not None
+                   else self._surviving_devices())
+        old_tp = eng.mesh.shape.get("model", 1) if eng.mesh is not None else 1
+        mesh = elastic.make_mesh_for_devices(devices, model_parallel=old_tp)
+        evicted = eng.evict_active()
+        eng.reshard_to(mesh)
+        for request in evicted:
+            eng.requeue(request, max_retries=self.max_retries,
+                        backoff_s=self.retry_backoff_s)
+        self.recoveries += 1
+        if self.monitor is not None:
+            # surviving nodes get a fresh epoch (all beating now) so the dead
+            # node does not re-trigger recovery every subsequent chunk
+            fresh = HeartbeatMonitor(
+                n_nodes=max(1, len(devices) // max(1, self.devices_per_node)),
+                dead_after_s=self.monitor.dead_after_s,
+                straggler_factor=self.monitor.straggler_factor)
+            for node in range(fresh.n_nodes):
+                fresh.beat(node, step_time_s=0.0)
+            self.monitor = fresh
+
+    # ---- the supervised loop ---------------------------------------------
+    def serve(self, requests=(), *, on_finish=None) -> dict:
+        """`engine.run` with supervision hooks at every chunk boundary.
+
+        Returns the engine's results dict. After a drain, `self.drained` is
+        True and — with a `drain_dir` — `self.snapshot_path` points at the
+        flushed snapshot; results contains only requests finished before the
+        drain completed (nothing is lost: the rest is in the snapshot).
+        """
+        eng = self.engine
+        for r in requests:
+            eng.submit(r)
+        eng._on_finish = on_finish
+        drain_started: float | None = None
+        while eng.has_work():
+            self._maybe_inject()
+            if self.guard.should_stop() and drain_started is None:
+                drain_started = eng.clock.now()
+                eng.draining = True
+            if drain_started is not None:
+                if eng.slots.num_active == 0:
+                    break
+                if (self.drain_timeout is not None
+                        and eng.clock.now() - drain_started >= self.drain_timeout):
+                    break
+                self._chunk()
+                continue
+            if self._monitor_says_restart():
+                self._recover_device_loss()
+            eng._try_admit()
+            if eng.slots.num_active == 0:
+                nxt = eng.queue.next_arrival()
+                if nxt is None:
+                    break
+                eng.clock.wait_until(nxt)
+                continue
+            self._chunk()
+        if drain_started is not None:
+            self.drained = True
+            self._flush_snapshot()
+        return eng.results
+
+    def _chunk(self) -> None:
+        eng = self.engine
+        t0 = time.perf_counter()
+        eng._step_chunk()
+        if self.metrics is not None:
+            self.metrics.log(
+                eng.chunks_run,
+                queue_depth=len(eng.queue),
+                waiting=len(eng.waiting),
+                active_slots=eng.slots.num_active,
+                admitted=eng.admitted,
+                retired=eng.retired,
+                rejected=len(eng.rejected),
+                requeued=eng.requeued,
+                recoveries=self.recoveries,
+                draining=eng.draining,
+                chunk_s=time.perf_counter() - t0)
+
+    # ---- drain snapshot ---------------------------------------------------
+    def _flush_snapshot(self) -> None:
+        eng = self.engine
+        # in-flight slots whose decode we abandoned at the timeout: their
+        # partial tokens are dropped from the snapshot ON PURPOSE — resume
+        # recomputes from the prompt and replays the same tokens bitwise
+        pending = eng.evict_active()
+        pending += list(eng.waiting)
+        eng.waiting.clear()
+        pending += eng.queue.drain()
+        self.snapshot = {
+            "clock": eng.clock.now(),
+            "results": {
+                str(rid): {"tokens": np.asarray(t).tolist(),
+                           "stats": st.to_json()}
+                for rid, (t, st) in eng.results.items()
+            },
+            "pending": [r.to_json() for r in pending],
+            "rejected": {str(rid): reason
+                         for rid, reason in eng.rejected.items()},
+        }
+        if self.drain_dir is not None:
+            os.makedirs(self.drain_dir, exist_ok=True)
+            path = os.path.join(self.drain_dir, SNAPSHOT_NAME)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self.snapshot, f)
+            os.replace(tmp, path)      # atomic: a torn snapshot never exists
+            self.snapshot_path = path
+
+
+def load_snapshot(path: str) -> tuple[dict, list[Request], dict]:
+    """Load a drain snapshot: (results, pending requests, rejected).
+
+    `results` has the engine's shape — {rid: (tokens int32 array,
+    RequestStats)} — so a resuming process serves the pending list on a
+    fresh engine and merges: `{**results, **engine.run(pending)}`. Pending
+    arrival times are rebased to 0 (the old engine clock died with the old
+    process); everything already in the queue is immediately schedulable.
+    """
+    if os.path.isdir(path):
+        path = os.path.join(path, SNAPSHOT_NAME)
+    with open(path) as f:
+        snap = json.load(f)
+    results = {
+        int(rid): (np.asarray(rec["tokens"], np.int32),
+                   RequestStats.from_json(rec["stats"]))
+        for rid, rec in snap["results"].items()
+    }
+    pending = []
+    for rec in snap["pending"]:
+        request = Request.from_json(rec)
+        request.arrival_time = 0.0
+        request.deadline = None     # absolute times from a dead clock
+        pending.append(request)
+    rejected = {int(rid): reason for rid, reason in snap["rejected"].items()}
+    return results, pending, rejected

@@ -1,0 +1,283 @@
+"""Fault-tolerant serving (serving/supervisor.py + engine admission control):
+an injected preemption must drain losslessly — every finished request's
+tokens intact, every unfinished request flushed to a resumable snapshot whose
+replay is bitwise identical to an uninterrupted run; overload must reject
+with a machine-readable reason and never silently drop a request; a real
+SIGTERM must drive the same drain path end to end in a subprocess; and the
+per-chunk metrics / summarize records must stay well-formed in every corner
+(empty results, fully-rejected runs)."""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import build_smoke as _bundle
+from repro.runtime import MetricsLogger
+from repro.serving import (AdmissionError, ContinuousEngine, FailureInjection,
+                           Request, ServingSupervisor, VirtualClock,
+                           load_snapshot, poisson_trace)
+from repro.serving.engine import summarize
+
+MAX_LEN = 64
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _engine(bundle, params, *, num_slots=2, chunk=4, max_queue=None,
+            temperature=0.0):
+    return ContinuousEngine(bundle, params, num_slots=num_slots,
+                            max_len=MAX_LEN, chunk=chunk,
+                            cache_dtype=jnp.float32, temperature=temperature,
+                            clock=VirtualClock(), max_queue=max_queue)
+
+
+def _trace(cfg, n=8, seed=3, temperature=False):
+    return poisson_trace(n, 200.0, vocab_size=cfg.vocab_size,
+                         prompt_lens=(6, 10), gen_lens=(4, 8, 12), seed=seed)
+
+
+# ------------------------------------------------------------ graceful drain
+
+def test_injected_preempt_drains_losslessly_and_resume_is_bitwise(tmp_path):
+    """preempt@2 → finished results survive, unfinished requests land in the
+    snapshot, and a fresh engine resuming from it reproduces the exact
+    tokens an uninterrupted run would have produced — for every request."""
+    cfg, bundle, params = _bundle("olmo-1b")
+    baseline = _engine(bundle, params).run(_trace(cfg))
+
+    eng = _engine(bundle, params)
+    sup = ServingSupervisor(eng, drain_dir=str(tmp_path),
+                            inject=(FailureInjection.parse("preempt@2"),))
+    partial = sup.serve(_trace(cfg))
+    assert sup.drained and sup.snapshot_path is not None
+    assert os.path.exists(sup.snapshot_path)
+
+    results, pending, rejected = load_snapshot(sup.snapshot_path)
+    assert not rejected
+    # nothing lost, nothing duplicated
+    assert set(results) == set(partial)
+    assert set(results) | {r.rid for r in pending} == set(baseline)
+    assert set(results).isdisjoint({r.rid for r in pending})
+    assert pending, "injection at chunk 2 should leave unfinished requests"
+
+    resumed = _engine(bundle, params).run(pending)
+    merged = {**results, **resumed}
+    for rid, (tokens, _st) in baseline.items():
+        np.testing.assert_array_equal(merged[rid][0], tokens,
+                                      err_msg=f"rid {rid}")
+
+
+def test_drain_timeout_evicts_in_flight_for_recompute(tmp_path):
+    """drain_timeout=0 abandons in-flight slots immediately: they must show
+    up in the snapshot's pending list (recompute-from-prompt), and replaying
+    them — sampled, so key discipline matters — still matches baseline."""
+    cfg, bundle, params = _bundle("olmo-1b")
+    trace = lambda: _trace(cfg, n=6, seed=11)
+    baseline = _engine(bundle, params, temperature=0.7).run(trace())
+
+    eng = _engine(bundle, params, temperature=0.7)
+    sup = ServingSupervisor(eng, drain_dir=str(tmp_path), drain_timeout=0.0,
+                            inject=(FailureInjection.parse("preempt@1"),))
+    sup.serve(trace())
+    results, pending, _ = load_snapshot(str(tmp_path))
+    assert pending, "timeout drain must evict the in-flight requests"
+    for r in pending:                       # rebased for the fresh clock
+        assert r.arrival_time == 0.0 and r.deadline is None
+    merged = {**results,
+              **_engine(bundle, params, temperature=0.7).run(pending)}
+    for rid, (tokens, _st) in baseline.items():
+        np.testing.assert_array_equal(merged[rid][0], tokens,
+                                      err_msg=f"rid {rid}")
+
+
+def test_draining_engine_rejects_new_submits():
+    cfg, bundle, params = _bundle("olmo-1b")
+    eng = _engine(bundle, params)
+    eng.draining = True
+    with pytest.raises(AdmissionError) as ei:
+        eng.submit(Request(rid=7, prompt=np.arange(2, 8), max_new_tokens=4))
+    assert ei.value.reason == "draining"
+    assert eng.rejected[7] == "draining"
+
+
+# --------------------------------------------------------- admission control
+
+def test_queue_full_rejects_with_reason_and_full_accounting():
+    """All-at-once burst against max_queue=1, num_slots=1: overflow arrivals
+    are rejected "queue_full"; every submitted rid ends in exactly one of
+    results or rejected — never silently dropped."""
+    cfg, bundle, params = _bundle("olmo-1b")
+    eng = _engine(bundle, params, num_slots=1, max_queue=1)
+    reqs = [Request(rid=i, prompt=np.arange(2, 10) % cfg.vocab_size,
+                    max_new_tokens=6, arrival_time=0.0) for i in range(6)]
+    results = eng.run(reqs)
+    assert set(results) | set(eng.rejected) == {r.rid for r in reqs}
+    assert set(results).isdisjoint(eng.rejected)
+    assert eng.rejected and all(v == "queue_full"
+                                for v in eng.rejected.values())
+    # the burst bound admits the free slot + max_queue before rejecting
+    assert len(results) == 2
+
+
+def test_deadline_and_queue_wait_expire_waiting_requests():
+    cfg, bundle, params = _bundle("olmo-1b")
+    eng = _engine(bundle, params, num_slots=1, chunk=4)
+    prompt = np.arange(2, 10) % cfg.vocab_size
+    hog = Request(rid=0, prompt=prompt, max_new_tokens=12, arrival_time=0.0)
+    dead = Request(rid=1, prompt=prompt, max_new_tokens=4, arrival_time=0.0,
+                   deadline=1e-9)
+    impatient = Request(rid=2, prompt=prompt, max_new_tokens=4,
+                        arrival_time=0.0, max_queue_wait=1e-9)
+    patient = Request(rid=3, prompt=prompt, max_new_tokens=4, arrival_time=0.0)
+    results = eng.run([hog, dead, impatient, patient])
+    assert eng.rejected == {1: "deadline_exceeded", 2: "queue_wait_exceeded"}
+    assert set(results) == {0, 3}
+
+
+def test_requeue_backoff_and_retries_exhausted():
+    cfg, bundle, params = _bundle("olmo-1b")
+    eng = _engine(bundle, params)
+    r = Request(rid=5, prompt=np.arange(2, 8), max_new_tokens=4)
+    assert eng.requeue(r, max_retries=2, backoff_s=0.5)
+    assert r.retries == 1 and r.arrival_time == pytest.approx(0.5)
+    assert eng.requeue(r, max_retries=2, backoff_s=0.5)
+    assert r.retries == 2 and r.arrival_time == pytest.approx(
+        eng.clock.now() + 1.0)
+    assert not eng.requeue(r, max_retries=2, backoff_s=0.5)
+    assert eng.rejected[5] == "retries_exhausted"
+    assert eng.requeued == 2
+
+
+def test_request_and_stats_json_roundtrip():
+    r = Request(rid=4, prompt=np.arange(3, 9, dtype=np.int32),
+                max_new_tokens=5, arrival_time=1.5, seed=17, deadline=9.0,
+                max_queue_wait=2.0, retries=1)
+    back = Request.from_json(r.to_json())
+    np.testing.assert_array_equal(back.prompt, r.prompt)
+    for f in ("rid", "max_new_tokens", "arrival_time", "seed", "deadline",
+              "max_queue_wait", "retries"):
+        assert getattr(back, f) == getattr(r, f), f
+
+
+# ---------------------------------------------------- observability corners
+
+def test_summarize_empty_results_is_well_formed():
+    agg = summarize({})
+    assert agg["requests"] == 0 and agg["new_tokens_total"] == 0
+    for key in ("span_s", "requests_per_s", "latency_p50_s", "latency_p95_s",
+                "queue_wait_mean_s", "ttft_mean_s", "decode_tok_per_s_mean"):
+        assert agg[key] == 0.0
+
+
+def test_engine_summarize_reports_admission_counters():
+    cfg, bundle, params = _bundle("olmo-1b")
+    eng = _engine(bundle, params, num_slots=1, max_queue=0)
+    reqs = [Request(rid=i, prompt=np.arange(2, 8) % cfg.vocab_size,
+                    max_new_tokens=4, arrival_time=0.0) for i in range(3)]
+    eng.run(reqs)
+    agg = eng.summarize()
+    assert agg["admitted"] == agg["requests"] >= 1
+    assert agg["rejected"] == len(reqs) - agg["admitted"]
+    assert agg["requeued"] == 0
+
+
+def test_supervisor_metrics_logs_one_record_per_chunk(tmp_path):
+    cfg, bundle, params = _bundle("olmo-1b")
+    path = str(tmp_path / "serve_metrics.jsonl")
+    with MetricsLogger(path) as metrics:
+        eng = _engine(bundle, params)
+        sup = ServingSupervisor(eng, metrics=metrics)
+        sup.serve(_trace(cfg, n=4, seed=9))
+    records = [json.loads(line) for line in open(path)]
+    assert len(records) == eng.chunks_run > 0
+    for rec in records:
+        for key in ("queue_depth", "waiting", "active_slots", "admitted",
+                    "retired", "rejected", "requeued", "recoveries",
+                    "draining", "chunk_s"):
+            assert key in rec
+    assert records[-1]["retired"] == eng.retired == len(eng.results)
+
+
+def test_failure_injection_parse():
+    inj = FailureInjection.parse("preempt@3")
+    assert (inj.kind, inj.at_chunk, inj.survivors) == ("preempt", 3, None)
+    inj = FailureInjection.parse("device_loss@5:2")
+    assert (inj.kind, inj.at_chunk, inj.survivors) == ("device_loss", 5, 2)
+    for bad in ("preempt", "explode@3", "device_loss@2", "preempt@x"):
+        with pytest.raises(ValueError):
+            FailureInjection.parse(bad)
+
+
+# ------------------------------------------------------- real-signal drain
+
+def test_sigterm_drains_supervised_engine_subprocess(tmp_path):
+    """End to end with a REAL signal: a child process serves wall-clock
+    traffic under a live-signal PreemptionGuard, the parent SIGTERMs it
+    mid-run, and the child must drain cleanly (exit 0), flush a snapshot,
+    and lose nothing — results + snapshot pending == everything submitted."""
+    drain_dir = str(tmp_path / "drain")
+    script = textwrap.dedent(f"""
+        import sys, threading
+        import numpy as np
+        from repro.configs import smoke_config
+        from repro.models import build
+        from repro.runtime.preemption import PreemptionGuard
+        from repro.serving import (ContinuousEngine, Request,
+                                   ServingSupervisor, WallClock)
+        import jax.numpy as jnp
+
+        cfg = smoke_config("olmo-1b")
+        bundle = build(cfg)
+        import jax
+        params = bundle.init(jax.random.PRNGKey(0))
+        eng = ContinuousEngine(bundle, params, num_slots=2, max_len=64,
+                               chunk=2, cache_dtype=jnp.float32,
+                               clock=WallClock())
+        guard = PreemptionGuard()
+        sup = ServingSupervisor(eng, guard=guard, drain_dir={drain_dir!r})
+        reqs = [Request(rid=i, prompt=np.arange(2, 10) %% cfg.vocab_size,
+                        max_new_tokens=40) for i in range(30)]
+
+        ready = threading.Event()
+        orig = eng._step_chunk
+        def step():
+            orig()
+            if eng.chunks_run == 1:
+                print("READY", flush=True)   # parent fires SIGTERM on this
+            ready.set()
+        eng._step_chunk = step
+
+        results = sup.serve(reqs)
+        assert sup.drained, "guard never fired"
+        assert sup.snapshot_path is not None
+        n_pending = len(sup.snapshot["pending"])
+        assert len(results) + n_pending == len(reqs), (
+            len(results), n_pending)
+        print(f"DRAINED finished={{len(results)}} pending={{n_pending}}",
+              flush=True)
+        sys.exit(0)
+    """.replace("%%", "%"))
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen([sys.executable, "-c", script], env=env, cwd=REPO,
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True)
+    try:
+        for line in proc.stdout:
+            if "READY" in line:
+                proc.send_signal(signal.SIGTERM)
+                break
+        out, err = proc.communicate(timeout=240)
+    except Exception:
+        proc.kill()
+        raise
+    assert proc.returncode == 0, err
+    assert "DRAINED" in out, out + err
+    assert os.path.exists(os.path.join(drain_dir, "snapshot.json"))
+    results, pending, _ = load_snapshot(drain_dir)
+    assert len(results) + len(pending) == 30

@@ -124,6 +124,39 @@ def test_preemption_guard_trigger():
     assert g.should_stop()
 
 
+def test_preemption_guard_real_sigterm():
+    """A real SIGTERM (os.kill, not trigger()) flips should_stop(), and
+    restore() reinstates the previous handler so a second SIGTERM kills the
+    process with the default disposition. Runs in a subprocess so the
+    signal delivery cannot disturb the test runner."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os, signal, sys
+        from repro.runtime.preemption import PreemptionGuard
+
+        g = PreemptionGuard()                 # installs SIGTERM/SIGINT handlers
+        assert not g.should_stop()
+        os.kill(os.getpid(), signal.SIGTERM)  # delivered synchronously here
+        assert g.should_stop(), "guard did not observe SIGTERM"
+        g.restore()
+        print("GUARD_OK", flush=True)
+        os.kill(os.getpid(), signal.SIGTERM)  # default handler -> terminates
+        print("UNREACHABLE", flush=True)
+        sys.exit(0)
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=60,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "GUARD_OK" in proc.stdout, proc.stdout + proc.stderr
+    assert "UNREACHABLE" not in proc.stdout
+    # killed by the restored default SIGTERM handler, not a clean exit
+    assert proc.returncode == -15, proc.returncode
+
+
 # ---------------------------------------------------------------------- moe
 
 def test_moe_dispatch_matches_dense_loop():
