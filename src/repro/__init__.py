@@ -15,7 +15,8 @@ below resolves lazily so `import repro` stays free of jax-graph work.
 """
 
 _FACADE = ("compress", "load_artifact", "CompressionArtifact",
-           "CompressionReport", "is_artifact_dir")
+           "CompressionReport", "is_artifact_dir", "verify_artifact",
+           "IntegrityError")
 
 __all__ = list(_FACADE)
 

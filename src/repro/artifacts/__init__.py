@@ -11,16 +11,20 @@ calibrate/train → plan → update → remap pipeline. See docs/api.md.
 from repro.artifacts.report import CompressionReport
 from repro.artifacts.artifact import (
     CompressionArtifact,
+    IntegrityError,
     is_artifact_dir,
     load_artifact,
+    verify_artifact,
 )
 
 __all__ = [
     "CompressionArtifact",
     "CompressionReport",
+    "IntegrityError",
     "compress",
     "is_artifact_dir",
     "load_artifact",
+    "verify_artifact",
 ]
 
 

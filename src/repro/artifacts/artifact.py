@@ -35,7 +35,7 @@ from typing import Any, Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, IntegrityError, _fsync_dir
 from repro.configs.base import ModelConfig
 from repro.artifacts.report import CompressionReport
 
@@ -116,8 +116,13 @@ class CompressionArtifact:
         ckpt = Checkpointer(os.path.join(directory, _FACTORS_SUBDIR), keep=1)
         ckpt.save(0, self.factors)
 
+        # per-leaf sha256 comes from the committed checkpoint manifest, so the
+        # artifact manifest attests the exact bytes on disk (end-to-end
+        # integrity: verify_artifact / load(verify=True) recheck them)
+        hashes = ckpt.manifest(0)
         leaves = {
-            name: {leaf: {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+            name: {leaf: {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                          "sha256": hashes[f"{name}/{leaf}"]["sha256"]}
                    for leaf, arr in sorted(fdict.items())}
             for name, fdict in sorted(self.factors.items())
         }
@@ -136,27 +141,24 @@ class CompressionArtifact:
             f.flush()
             os.fsync(f.fileno())
         os.rename(tmp, os.path.join(directory, _MANIFEST))
+        _fsync_dir(directory)
         return directory
 
     @classmethod
-    def load(cls, directory: str, *, shardings: Any | None = None, mesh=None
-             ) -> "CompressionArtifact":
+    def load(cls, directory: str, *, shardings: Any | None = None, mesh=None,
+             verify: bool = True) -> "CompressionArtifact":
         """Restore from `save`'s layout. `shardings` (optional pytree matching
         the factors structure) device_puts each leaf onto the current mesh —
         the checkpointer's reshard-on-restore path. `mesh` is the convenience
         form: factor shardings are derived from the matrix names
         (parallel/sharding.py:factor_specs), so each leaf lands on its TP
-        shard straight from disk with no host-resident full copy."""
-        path = os.path.join(directory, _MANIFEST)
-        if not os.path.exists(path):
-            raise FileNotFoundError(
-                f"no compression artifact at {directory!r} (missing {_MANIFEST})")
-        with open(path) as f:
-            manifest = json.load(f)
-        if manifest.get("format_version") != _FORMAT_VERSION:
-            raise ValueError(
-                f"unsupported artifact format {manifest.get('format_version')!r}")
+        shard straight from disk with no host-resident full copy.
 
+        `verify` (default True) checks every factor leaf's sha256 content
+        hash and shape/dtype against the manifests, raising `IntegrityError`
+        naming the offending leaf; `verify=False` skips the hash pass
+        (degraded load — see serve.py --allow-degraded)."""
+        manifest = _read_manifest(directory)
         config = ModelConfig(**manifest["config"])
         report = CompressionReport.from_json(manifest["report"])
         like = {
@@ -168,23 +170,101 @@ class CompressionArtifact:
         ckpt = Checkpointer(os.path.join(directory, _FACTORS_SUBDIR), keep=1)
         step = ckpt.latest_step()
         if step is None:
-            raise FileNotFoundError(
-                f"artifact at {directory!r} has no committed factor checkpoint")
+            raise IntegrityError(
+                f"artifact at {directory!r} has no committed factor "
+                f"checkpoint (missing or uncommitted "
+                f"{_FACTORS_SUBDIR}/step_* — COMMIT marker absent)")
         if mesh is not None:
             if shardings is not None:
                 raise ValueError("pass either mesh or shardings, not both")
             from repro.parallel import sharding as shardlib
             shardings = shardlib.make_sharding(mesh, shardlib.factor_specs(like))
-        factors = ckpt.restore(step, like, shardings=shardings)
+        factors = ckpt.restore(step, like, shardings=shardings, verify=verify)
         soft_ks = manifest.get("soft_ks")
         return cls(config=config, report=report, factors=factors,
                    soft_ks=soft_ks, extra=manifest.get("extra", {}))
 
 
-def load_artifact(directory: str, *, shardings: Any | None = None, mesh=None
-                  ) -> CompressionArtifact:
+def _read_manifest(directory: str) -> dict:
+    path = os.path.join(directory, _MANIFEST)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no compression artifact at {directory!r} (missing {_MANIFEST})")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, ValueError) as e:
+        raise IntegrityError(
+            f"artifact manifest {path} is unreadable (truncated or corrupt "
+            f"JSON: {e})") from e
+    if manifest.get("format_version") != _FORMAT_VERSION:
+        raise ValueError(
+            f"unsupported artifact format {manifest.get('format_version')!r}")
+    return manifest
+
+
+def verify_artifact(directory: str, *, strict: bool = True) -> list[str]:
+    """End-to-end integrity check of a saved artifact without building params.
+
+    Cross-checks three layers: the artifact manifest (artifact.json), the
+    factor checkpoint's own manifest (tree.json), and the bytes on disk —
+    every leaf must agree on shape/dtype and match its sha256, neither
+    manifest may list leaves the other lacks, and the checkpoint must carry a
+    COMMIT marker. Returns the list of problems (empty = intact); with
+    `strict` (the default) a non-empty list raises `IntegrityError` naming
+    every offending leaf. Missing artifact.json stays FileNotFoundError —
+    "not an artifact" is a different failure than "corrupt artifact"."""
+    manifest = _read_manifest(directory)
+    issues: list[str] = []
+    ckpt = Checkpointer(os.path.join(directory, _FACTORS_SUBDIR), keep=1)
+    step = ckpt.latest_step()
+    if step is None:
+        issues.append(
+            f"no committed factor checkpoint under {directory}/"
+            f"{_FACTORS_SUBDIR} (COMMIT marker absent)")
+    else:
+        try:
+            ck_leaves = ckpt.manifest(step)
+        except IntegrityError as e:
+            ck_leaves = None
+            issues.append(str(e))
+        art_leaves = {
+            f"{name}/{leaf}": ent
+            for name, fdict in manifest["leaves"].items()
+            for leaf, ent in fdict.items()
+        }
+        if ck_leaves is not None:
+            for key in sorted(set(art_leaves) | set(ck_leaves)):
+                a, c = art_leaves.get(key), ck_leaves.get(key)
+                if a is None:
+                    issues.append(f"leaf {key!r}: in factor checkpoint but "
+                                  f"not in artifact manifest")
+                    continue
+                if c is None:
+                    issues.append(f"leaf {key!r}: in artifact manifest but "
+                                  f"missing from factor checkpoint")
+                    continue
+                if list(a["shape"]) != list(c["shape"]):
+                    issues.append(
+                        f"leaf {key!r}: artifact shape {list(a['shape'])} != "
+                        f"checkpoint shape {list(c['shape'])}")
+                if a.get("sha256") and c.get("sha256") and a["sha256"] != c["sha256"]:
+                    issues.append(
+                        f"leaf {key!r}: artifact sha256 != checkpoint sha256 "
+                        f"(manifests disagree)")
+            issues.extend(ckpt.verify(step))     # bytes vs checkpoint manifest
+    if strict and issues:
+        raise IntegrityError(
+            f"artifact at {directory!r} failed verification "
+            f"({len(issues)} issue(s)):\n  " + "\n  ".join(issues))
+    return issues
+
+
+def load_artifact(directory: str, *, shardings: Any | None = None, mesh=None,
+                  verify: bool = True) -> CompressionArtifact:
     """Module-level alias for `CompressionArtifact.load`."""
-    return CompressionArtifact.load(directory, shardings=shardings, mesh=mesh)
+    return CompressionArtifact.load(directory, shardings=shardings, mesh=mesh,
+                                    verify=verify)
 
 
 def is_artifact_dir(directory: str) -> bool:

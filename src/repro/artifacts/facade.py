@@ -15,13 +15,16 @@ everything needed to `save()` once and serve many times.
 
 from __future__ import annotations
 
+import os
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.artifacts.artifact import CompressionArtifact
+from repro.checkpoint import CheckpointPolicy
 from repro.configs.base import ModelConfig
+from repro.core.supervision import CompressionInterrupted, WatchdogConfig
 
 
 def _default_calib(cfg: ModelConfig, n: int, seq: int, seed: int):
@@ -49,6 +52,11 @@ def compress(
     quantize: bool | None = None,
     prefix_embeds: jnp.ndarray | None = None,
     seed: int = 0,
+    ckpt_dir: str | None = None,     # checkpoint root (rank_train/ + calib/)
+    ckpt_every: int = 10,
+    resume: bool = False,
+    guard: Any | None = None,        # runtime.PreemptionGuard-like
+    watchdog: WatchdogConfig | None = None,
 ) -> CompressionArtifact:
     """Calibrate/train → plan → update → (remap) → CompressionArtifact.
 
@@ -58,6 +66,13 @@ def compress(
     `train` > 0 the per-matrix truncation positions θ are trained first
     (paper Algorithm 1) and the rank plan comes from the trained soft-k's;
     otherwise the training-free energy-waterfill plan is used.
+
+    With `ckpt_dir`, every long-running stage checkpoints its state there
+    (`<dir>/rank_train` for Algorithm-1 θ-training, `<dir>/calib/{spectra,
+    ipca}` for the two calibration passes). A firing `guard` commits the
+    in-flight stage and raises `CompressionInterrupted` — launchers treat
+    that as a clean exit; rerunning the identical call with `resume=True`
+    continues to a byte-identical artifact.
     """
     from repro.models import build, compression as mc
 
@@ -69,6 +84,7 @@ def compress(
 
     soft_ks = None
     train_trace = None
+    rt_result = None
     if train and method not in ("dobi", "dobi_noremap"):
         raise ValueError(
             f"train={train} is incompatible with method={method!r}: only "
@@ -81,14 +97,28 @@ def compress(
             cfg, ratio=ratio, steps=int(train), batch=train_batch,
             seq=train_seq, lr=train_lr, svd_rank_cap=svd_rank_cap,
             seed=seed, remap=(method == "dobi"), params=params,
-            data_cfg=data_cfg)
+            data_cfg=data_cfg,
+            ckpt_dir=os.path.join(ckpt_dir, "rank_train") if ckpt_dir else None,
+            ckpt_every=ckpt_every, resume=resume, guard=guard,
+            watchdog=watchdog)
+        if rt_result.core.preempted:
+            raise CompressionInterrupted(
+                f"rank training preempted at step "
+                f"{rt_result.core.completed_steps}/{int(train)}; checkpoint "
+                f"committed — rerun with resume=True to continue",
+                stage="rank_train", step=rt_result.core.completed_steps,
+                checkpoint_dir=ckpt_dir)
         soft_ks = rt_result.soft_ks
         train_trace = rt_result.trace
 
+    calib_policy = (CheckpointPolicy(os.path.join(ckpt_dir, "calib"),
+                                     every=ckpt_every)
+                    if ckpt_dir else None)
     factors, report = mc.compress_model_factors(
         params, cfg, list(calib), ratio, method=method,
         trained_soft_ks=soft_ks, quantize=quantize,
-        prefix_embeds=prefix_embeds)
+        prefix_embeds=prefix_embeds,
+        calib_policy=calib_policy, guard=guard, resume=resume)
 
     report.provenance.update({
         "train_steps": int(train),
@@ -99,6 +129,12 @@ def compress(
         report.provenance["train_loss"] = [train_trace[0]["loss"],
                                            train_trace[-1]["loss"]]
         report.provenance["train_r_now"] = train_trace[-1]["r_now"]
+    if rt_result is not None:
+        # deterministic counters only (identical for interrupted-and-resumed
+        # vs uninterrupted runs — artifact bytes must match)
+        report.provenance["train_masked_steps"] = rt_result.core.masked_steps
+        report.provenance["train_masked_total"] = rt_result.core.masked_total
+        report.provenance["train_rollbacks"] = rt_result.core.rollbacks
 
     return CompressionArtifact(config=cfg, report=report, factors=factors,
                                soft_ks=soft_ks)

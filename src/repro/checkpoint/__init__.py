@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, IntegrityError
+from repro.checkpoint.policy import CheckpointPolicy

@@ -1,9 +1,18 @@
 """Fault-tolerant checkpointing (no orbax in this environment).
 
 Guarantees:
-  * atomicity — state is written into a temp dir, fsync'd, then renamed and
-    stamped with a COMMIT marker; readers only consider committed steps, so a
-    preemption mid-save can never corrupt the restore point;
+  * atomicity — state is written into a temp dir, every file fsync'd, then the
+    dir is renamed and stamped with a COMMIT marker (itself fsync'd, followed
+    by an fsync of the parent directory, so a committed step survives power
+    loss); readers only consider committed steps, so a preemption mid-save can
+    never corrupt the restore point;
+  * crash hygiene — orphaned `step_*.tmp` dirs left by a killed writer are
+    garbage-collected on construction;
+  * integrity — the manifest records per-leaf sha256 content hashes alongside
+    shape/dtype; `restore` verifies bytes and validates every leaf against
+    both the manifest and the caller's `like` structure, raising
+    `IntegrityError` naming the offending leaf instead of a deep XLA shape
+    error downstream;
   * resharding restore — arrays are saved as full (host-gathered) npy per
     leaf; restore `device_put`s onto the *current* mesh/shardings, so an
     elastic restart on a different device count Just Works;
@@ -12,19 +21,35 @@ Guarantees:
   * retention — keep-last-N garbage collection.
 
 Layout:  <dir>/step_000123/{leaf files *.npy, tree.json, COMMIT}
+
+`tree.json` additionally carries an optional JSON `extra` payload
+(`save(step, tree, extra=...)` / `load_extra(step)`) so loop state that is
+not an array — step counters, traces, watchdog counters — commits atomically
+with the arrays it describes.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class IntegrityError(RuntimeError):
+    """Checkpoint/artifact bytes do not match their manifest.
+
+    Raised with a message naming the offending leaf (missing file, hash
+    mismatch, shape/dtype mismatch, unreadable npy, torn manifest). Corrupted
+    state is rejected at load — it never silently reaches training or
+    serving.
+    """
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
@@ -43,23 +68,55 @@ def _part(p) -> str:
     return str(p)
 
 
+def _sha256(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    dirfd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(dirfd)
+    finally:
+        os.close(dirfd)
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._gc_orphans()
+
+    def _gc_orphans(self) -> None:
+        """Remove `step_*.tmp` dirs left behind by a writer killed mid-save.
+
+        They are never readable (no COMMIT) and a fresh save to the same step
+        would recreate them; reaping on init keeps a crash loop from leaking
+        one orphan per restart."""
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: dict | None = None) -> None:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         if blocking:
-            self._write(step, host_tree)
+            self._write(step, host_tree, extra)
         else:
             self.wait()
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree), daemon=True
+                target=self._write, args=(step, host_tree, extra), daemon=True
             )
             self._thread.start()
 
@@ -68,7 +125,7 @@ class Checkpointer:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_tree: Any) -> None:
+    def _write(self, step: int, host_tree: Any, extra: dict | None = None) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
@@ -79,24 +136,33 @@ class Checkpointer:
         for i, (key, leaf) in enumerate(items):
             fname = f"leaf_{i:05d}.npy"
             arr = np.asarray(leaf)
+            dtype = str(arr.dtype)
             if arr.dtype == jnp.bfloat16:
-                np.save(os.path.join(tmp, fname), arr.view(np.uint16))
-                manifest[key] = {"file": fname, "dtype": "bfloat16", "shape": list(arr.shape)}
-            else:
-                np.save(os.path.join(tmp, fname), arr)
-                manifest[key] = {"file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+                arr, dtype = arr.view(np.uint16), "bfloat16"
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest[key] = {"file": fname, "dtype": dtype,
+                             "shape": list(arr.shape), "sha256": _sha256(arr)}
         with open(os.path.join(tmp, "tree.json"), "w") as f:
-            json.dump({"step": step, "leaves": manifest}, f)
-        dirfd = os.open(tmp, os.O_RDONLY)
-        try:
-            os.fsync(dirfd)
-        finally:
-            os.close(dirfd)
+            json.dump({"step": step, "leaves": manifest,
+                       "extra": extra if extra is not None else {}}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-        with open(os.path.join(final, "COMMIT"), "w") as f:
+        # the COMMIT marker and the rename itself must both be durable: fsync
+        # the marker, then the parent dir so the rename's entry survives too
+        commit = os.path.join(final, "COMMIT")
+        with open(commit, "w") as f:
             f.write("ok")
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(final)
+        _fsync_dir(self.dir)
         self._gc()
 
     def _gc(self) -> None:
@@ -118,23 +184,90 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _meta(self, step: int) -> dict:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        path = os.path.join(final, "tree.json")
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            raise IntegrityError(f"checkpoint step {step} has no tree.json "
+                                 f"manifest ({final})") from None
+        except (json.JSONDecodeError, ValueError) as e:
+            raise IntegrityError(
+                f"checkpoint step {step} manifest is unreadable (truncated "
+                f"or corrupt tree.json: {e})") from e
+
+    def manifest(self, step: int) -> dict:
+        """The per-leaf manifest of a committed step: key → {file, dtype,
+        shape, sha256} (sha256 absent only in pre-integrity checkpoints)."""
+        return self._meta(step)["leaves"]
+
+    def load_extra(self, step: int) -> dict:
+        """The JSON `extra` payload saved alongside the arrays (atomic with
+        them — both live in tree.json)."""
+        return self._meta(step).get("extra", {})
+
+    def _load_leaf(self, step: int, key: str, ent: dict, *,
+                   verify: bool = True) -> np.ndarray:
+        """Load + verify one leaf as the host array it was saved as."""
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            raw = np.load(os.path.join(final, ent["file"]))
+        except FileNotFoundError:
+            raise IntegrityError(
+                f"leaf {key!r}: file {ent['file']} missing from "
+                f"checkpoint step {step}") from None
+        except Exception as e:
+            raise IntegrityError(
+                f"leaf {key!r}: file {ent['file']} is unreadable "
+                f"(corrupt npy: {e})") from e
+        if list(raw.shape) != list(ent["shape"]):
+            raise IntegrityError(
+                f"leaf {key!r}: stored shape {list(raw.shape)} != manifest "
+                f"shape {list(ent['shape'])}")
+        if verify and ent.get("sha256") is not None:
+            got = _sha256(raw)
+            if got != ent["sha256"]:
+                raise IntegrityError(
+                    f"leaf {key!r}: content hash mismatch (manifest "
+                    f"{ent['sha256'][:12]}…, bytes {got[:12]}…) — "
+                    f"checkpoint step {step} is corrupt")
+        if ent["dtype"] == "bfloat16":
+            return raw.view(jnp.bfloat16)
+        return raw.astype(ent["dtype"])
+
+    @staticmethod
+    def _check_like(key: str, ent: dict, leaf_like: Any) -> None:
+        """Validate a manifest entry against the caller's expected leaf."""
+        shape = getattr(leaf_like, "shape", None)
+        if shape is not None and list(shape) != list(ent["shape"]):
+            raise IntegrityError(
+                f"leaf {key!r}: checkpoint shape {list(ent['shape'])} != "
+                f"expected shape {list(shape)}")
+        dtype = getattr(leaf_like, "dtype", None)
+        if dtype is not None and jnp.dtype(dtype) != jnp.dtype(ent["dtype"]):
+            raise IntegrityError(
+                f"leaf {key!r}: checkpoint dtype {ent['dtype']} != "
+                f"expected dtype {jnp.dtype(dtype)}")
+
     def restore(
         self,
         step: int,
         like: Any,
         *,
         shardings: Any | None = None,
+        verify: bool = True,
     ) -> Any:
         """Restore into the structure of `like` (arrays or ShapeDtypeStructs).
 
         `shardings`: optional matching pytree of NamedShardings — arrays are
         device_put onto them (reshard-on-restore for elastic restarts).
+        Every leaf is validated against the manifest's shape/dtype AND
+        `like`'s, and (with `verify`, the default) its sha256 content hash;
+        any mismatch raises `IntegrityError` naming the leaf.
         """
-        final = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(final, "tree.json")) as f:
-            meta = json.load(f)
-        manifest = meta["leaves"]
-
+        manifest = self.manifest(step)
         items, treedef = _flatten(like)
         shard_leaves = None
         if shardings is not None:
@@ -145,14 +278,45 @@ class Checkpointer:
         for i, (key, leaf_like) in enumerate(items):
             ent = manifest.get(key)
             if ent is None:
-                raise KeyError(f"checkpoint missing leaf {key!r}")
-            raw = np.load(os.path.join(final, ent["file"]))
-            if ent["dtype"] == "bfloat16":
-                raw = raw.view(jnp.bfloat16)
-            arr = raw.astype(ent["dtype"]) if ent["dtype"] != "bfloat16" else raw
+                raise IntegrityError(f"checkpoint missing leaf {key!r}")
+            self._check_like(key, ent, leaf_like)
+            arr = self._load_leaf(step, key, ent, verify=verify)
             if shard_leaves is not None:
                 arr = jax.device_put(arr, shard_leaves[i])
             else:
                 arr = jnp.asarray(arr)
             leaves.append(arr)
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore_nested(self, step: int, *, verify: bool = True) -> dict:
+        """Restore a committed step as nested host dicts of numpy arrays.
+
+        Keys are rebuilt by splitting manifest paths on "/". No `like` is
+        needed and nothing touches a device — dtypes (including float64
+        accumulators) survive exactly, which the resumable-calibration path
+        relies on. Hash/shape verification is identical to `restore`."""
+        manifest = self.manifest(step)
+        out: dict = {}
+        for key in sorted(manifest):
+            arr = self._load_leaf(step, key, manifest[key], verify=verify)
+            node = out
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return out
+
+    def verify(self, step: int) -> list[str]:
+        """Byte-check every leaf of a committed step without building a
+        pytree; returns a list of problems (empty = intact)."""
+        issues: list[str] = []
+        try:
+            manifest = self.manifest(step)
+        except IntegrityError as e:
+            return [str(e)]
+        for key, ent in sorted(manifest.items()):
+            try:
+                self._load_leaf(step, key, ent, verify=True)
+            except IntegrityError as e:
+                issues.append(str(e))
+        return issues

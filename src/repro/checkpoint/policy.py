@@ -1,0 +1,27 @@
+"""CheckpointPolicy — when/where/how a loop snapshots its state.
+
+The training-side twin of the serving drain knobs (`--drain-dir` /
+`--drain-timeout`): one small value object carried into `train_ranks`,
+`collect_calibration`, and the launchers, so every resumable loop agrees on
+the checkpoint directory, cadence, retention, and save mode.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+@dataclass(frozen=True)
+class CheckpointPolicy:
+    directory: str
+    every: int = 10          # snapshot cadence in steps/batches
+    keep: int = 3            # keep-last-N retention
+    blocking: bool = True    # False → background-thread save
+
+    def make(self) -> Checkpointer:
+        return Checkpointer(self.directory, keep=self.keep)
+
+    def due(self, step: int) -> bool:
+        return step > 0 and step % max(1, self.every) == 0

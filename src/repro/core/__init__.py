@@ -23,6 +23,9 @@ from repro.core.ipca import (
     ipca_init,
     ipca_update,
     ipca_fit,
+    ipca_fit_stream,
+    ipca_snapshot,
+    ipca_restore,
     pca_fit,
     update_weight,
     weight_factors,
@@ -57,3 +60,9 @@ from repro.core.planner import (
 )
 from repro.core.compress import compress, CompressionReport, CompressedMatrix
 from repro.core.rank_training import RankTrainConfig, RankTrainResult, train_ranks, init_theta
+from repro.core.supervision import (
+    CompressionInterrupted,
+    DivergenceError,
+    DivergenceWatchdog,
+    WatchdogConfig,
+)

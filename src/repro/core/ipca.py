@@ -19,10 +19,11 @@ supported.
 
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from typing import Any, Iterable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class IPCAState(NamedTuple):
@@ -75,6 +76,77 @@ def ipca_fit(v_stack: jnp.ndarray, k: int, *, center: bool = False) -> jnp.ndarr
 
     state, _ = jax.lax.scan(step, state, v_stack)
     return state.components
+
+
+def ipca_snapshot(state: IPCAState) -> dict:
+    """Host-side snapshot of an IPCAState (plain numpy, checkpointable)."""
+    return {
+        "components": np.asarray(jax.device_get(state.components)),
+        "weights": np.asarray(jax.device_get(state.weights)),
+        "mean": np.asarray(jax.device_get(state.mean)),
+        "count": np.asarray(jax.device_get(state.count)),
+    }
+
+
+def ipca_restore(snap: dict) -> IPCAState:
+    """Rebuild an IPCAState from `ipca_snapshot` output (or a checkpoint's
+    nested-dict restore of one)."""
+    return IPCAState(
+        components=jnp.asarray(snap["components"]),
+        weights=jnp.asarray(snap["weights"]),
+        mean=jnp.asarray(snap["mean"]),
+        count=jnp.asarray(snap["count"], jnp.int32).reshape(()),
+    )
+
+
+def ipca_fit_stream(
+    bases: Iterable[jnp.ndarray],
+    n: int,
+    k: int,
+    *,
+    center: bool = False,
+    dtype=jnp.float32,
+    policy: Any | None = None,      # checkpoint.CheckpointPolicy
+    guard: Any | None = None,       # runtime.PreemptionGuard-like
+    resume: bool = False,
+) -> tuple[IPCAState, int, bool]:
+    """Resumable IPCA over a stream of per-batch bases (each (n, k_i)).
+
+    Returns (state, batches_absorbed, preempted). With a `policy`, the running
+    `IPCAState` is committed atomically every `policy.every` batches (and once
+    more on preemption); `resume=True` restores the latest committed state and
+    skips the already-absorbed prefix of `bases` — so the stream must be
+    re-iterable from the start (a list, or a fresh generator of the same
+    batches). The restored run is bitwise identical to an uninterrupted one:
+    the state is the only carried quantity and it round-trips through the
+    checkpoint exactly.
+    """
+    state = ipca_init(n, k, dtype)
+    done = 0
+    ckpt = policy.make() if policy is not None else None
+    if ckpt is not None and resume:
+        step = ckpt.latest_step()
+        if step is not None:
+            state = ipca_restore(ckpt.restore_nested(step)["state"])
+            done = int(ckpt.load_extra(step)["batches"])
+
+    preempted = False
+    for i, v_i in enumerate(bases):
+        if i < done:                      # already absorbed before resume
+            continue
+        if guard is not None and guard.should_stop():
+            preempted = True
+            break
+        state = ipca_update(state, v_i, center=center)
+        done = i + 1
+        if ckpt is not None and policy.due(done):
+            ckpt.save(done, {"state": ipca_snapshot(state)},
+                      blocking=policy.blocking, extra={"batches": done})
+    if ckpt is not None:
+        ckpt.save(done, {"state": ipca_snapshot(state)},
+                  blocking=True, extra={"batches": done})
+        ckpt.wait()
+    return state, done, preempted
 
 
 def pca_fit(v_list: Sequence[jnp.ndarray] | jnp.ndarray, k: int) -> jnp.ndarray:

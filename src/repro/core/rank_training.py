@@ -6,20 +6,44 @@ values of A with its learnable θ (via core.truncation), and propagates the
 truncated activations. Everything except the θ vector is frozen; gradients
 flow through the stabilized SVD VJP (core.svd).
 
-This module owns the outer loop: multi-objective loss, Adam on θ only, and
-the trace used by benchmarks (loss / R_now per step, mirrors paper Fig. 7).
+This module owns the outer loop: multi-objective loss, Adam on θ only, the
+trace used by benchmarks (loss / R_now per step, mirrors paper Fig. 7), and —
+because this loop is the "once" of compress-once/serve-many — its
+supervision (core/supervision.py):
+
+  * checkpoint/resume — a `CheckpointPolicy` commits atomic snapshots of
+    θ/Adam moments/trace/watchdog state every N steps (plus one on
+    preemption via a `PreemptionGuard`); `resume=True` restores the latest
+    committed step and continues to a bitwise-identical result;
+  * divergence watchdog — non-finite gradients from SVD spikes are masked
+    but COUNTED (trace `masked_grads`, a RuntimeWarning per masking step,
+    provenance totals), and K consecutive bad steps (non-finite loss/grads
+    or a loss spike vs the running EMA) roll the loop back to its last good
+    checkpoint with lr/β backoff; exhausted rollbacks raise a terminal
+    `DivergenceError` carrying the trace instead of emitting garbage θ.
+
+`batches` may be a plain iterable (legacy) or a `callable(step) -> batch`;
+the callable form is preferred — rollback and resume re-read earlier batch
+indices directly instead of caching consumed iterator items.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Iterable
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointPolicy
 from repro.core import truncation as trunc_lib
+from repro.core.supervision import (
+    DivergenceError,
+    DivergenceWatchdog,
+    WatchdogConfig,
+)
 
 
 @dataclass
@@ -40,24 +64,73 @@ class RankTrainResult:
     thetas: jnp.ndarray
     soft_ks: np.ndarray
     trace: list[dict] = field(default_factory=list)
+    events: list[dict] = field(default_factory=list)   # rollbacks etc.
+    masked_steps: int = 0         # steps on which any gradient was masked
+    masked_total: int = 0         # total non-finite gradient entries masked
+    rollbacks: int = 0
+    preempted: bool = False       # guard fired; state committed, resumable
+    completed_steps: int = 0
+
+
+class _BatchSource:
+    """Index-addressable view over `batches` (callable or iterable).
+
+    A callable source is read directly by index. An iterable is consumed
+    lazily with items cached from the last checkpoint onward — enough for the
+    watchdog to replay a rolled-back window — and `release_below` drops what
+    a committed checkpoint guarantees is never needed again.
+    """
+
+    def __init__(self, batches: Iterable | Callable[[int], Any]):
+        self._fn = batches if callable(batches) else None
+        self._it = None if callable(batches) else iter(batches)
+        self._cache: dict[int, Any] = {}
+        self._next = 0
+
+    def get(self, i: int) -> Any:          # raises StopIteration when spent
+        if self._fn is not None:
+            return self._fn(i)
+        while self._next <= i:
+            self._cache[self._next] = next(self._it)
+            self._next += 1
+        return self._cache[i]
+
+    def release_below(self, i: int) -> None:
+        for j in [j for j in self._cache if j < i]:
+            del self._cache[j]
 
 
 def train_ranks(
     task_loss_fn: Callable[[jnp.ndarray, object], jnp.ndarray],
     theta0: jnp.ndarray,
     shapes: jnp.ndarray,          # (N, 2) int (m, n) per eligible matrix
-    batches: Iterable,
+    batches: Iterable | Callable[[int], Any],
     cfg: RankTrainConfig,
+    *,
+    policy: CheckpointPolicy | None = None,
+    guard: Any | None = None,               # runtime.PreemptionGuard-like
+    watchdog: WatchdogConfig | None = None,
+    resume: bool = False,
 ) -> RankTrainResult:
-    """Optimize θ (one scalar per matrix) with L = L_task + γ·|R_now − R_tar|."""
-    r_max = jnp.minimum(shapes[:, 0], shapes[:, 1]).astype(jnp.float32)
+    """Optimize θ (one scalar per matrix) with L = L_task + γ·|R_now − R_tar|.
 
-    def total_loss(thetas, batch):
+    With a `policy`, the loop snapshots {θ, Adam m/v, step, trace, watchdog
+    state, current lr/β, and the rollback target} atomically every
+    `policy.every` good steps; `resume=True` restores the latest committed
+    snapshot so an interrupted run continues bitwise. A `guard` whose
+    `should_stop()` fires makes the loop commit a final snapshot and return
+    early with `preempted=True` — callers treat that as a clean exit.
+    """
+    r_max = jnp.minimum(shapes[:, 0], shapes[:, 1]).astype(jnp.float32)
+    wcfg = watchdog or WatchdogConfig()
+    wd = DivergenceWatchdog(wcfg)
+
+    def total_loss(thetas, batch, beta):
         ks = trunc_lib.theta_to_k(thetas, r_max)
         l_task = task_loss_fn(thetas, batch)
         l_ratio = trunc_lib.ratio_loss(
             ks, shapes, cfg.target_ratio,
-            trunc_lib.TruncationConfig(cfg.beta, cfg.remap, cfg.ratio_weight),
+            trunc_lib.TruncationConfig(beta, cfg.remap, cfg.ratio_weight),
         )
         return l_task + l_ratio, (l_task, l_ratio)
 
@@ -67,27 +140,120 @@ def train_ranks(
     v = jnp.zeros_like(theta0)
     thetas = theta0
     trace: list[dict] = []
+    events: list[dict] = []
     t = 0
-    for batch in batches:
+    lr, beta = cfg.lr, cfg.beta
+    # rollback target: the last committed (or initial) good state; lives in
+    # every checkpoint so interrupted-and-resumed runs take identical
+    # rollback decisions
+    good_arrays = {"thetas": thetas, "m": m, "v": v}
+    good_meta = {"t": 0, "trace_len": 0, "lr": lr, "beta": beta,
+                 "wd": wd.state_dict()}
+
+    ckpt = policy.make() if policy is not None else None
+    every = policy.every if policy is not None else 10
+    if ckpt is not None and resume:
+        step = ckpt.latest_step()
+        if step is not None:
+            like = {"cur": dict(good_arrays), "good": dict(good_arrays)}
+            tree = ckpt.restore(step, like)
+            extra = ckpt.load_extra(step)
+            thetas, m, v = (tree["cur"]["thetas"], tree["cur"]["m"],
+                            tree["cur"]["v"])
+            good_arrays = tree["good"]
+            good_meta = extra["good"]
+            t = int(extra["t"])
+            trace = list(extra["trace"])
+            events = list(extra["events"])
+            lr, beta = float(extra["lr"]), float(extra["beta"])
+            wd.load_state(extra["wd"])
+
+    def save(step_idx: int, *, blocking: bool, preempted: bool = False) -> None:
+        ckpt.save(step_idx,
+                  {"cur": {"thetas": thetas, "m": m, "v": v},
+                   "good": dict(good_arrays)},
+                  blocking=blocking,
+                  extra={"t": step_idx, "trace": trace, "events": events,
+                         "lr": lr, "beta": beta, "wd": wd.state_dict(),
+                         "good": good_meta, "preempted": preempted})
+
+    src = _BatchSource(batches)
+    preempted = False
+    while t < cfg.steps:
+        if guard is not None and guard.should_stop():
+            preempted = True
+            break
+        try:
+            batch = src.get(t)            # batch index t drives step t+1
+        except StopIteration:
+            break
+        src.release_below(good_meta["t"])
         t += 1
-        (loss, (l_task, l_ratio)), g = grad_fn(thetas, batch)
-        g = jnp.where(jnp.isfinite(g), g, 0.0)   # belt-and-braces vs SVD spikes
+        (loss, (l_task, l_ratio)), g = grad_fn(
+            thetas, batch, jnp.asarray(beta, jnp.float32))
+        finite = jnp.isfinite(g)
+        n_masked = int(jnp.sum(~finite))
+        if n_masked:
+            g = jnp.where(finite, g, 0.0)     # mask SVD spikes — but count them
+            warnings.warn(
+                f"rank-train step {t}: masked {n_masked} non-finite gradient "
+                f"entrie(s) (stabilized-SVD spike near equal singular values)",
+                RuntimeWarning, stacklevel=2)
+        flags = wd.observe(float(loss), n_masked, t)
+
+        if flags["bad"] and wd.should_rollback():
+            if wd.exhausted():
+                raise DivergenceError(
+                    f"rank training diverged: {wd.bad_streak} consecutive bad "
+                    f"steps at step {t} after {wd.rollbacks} rollback(s) "
+                    f"(lr {lr:g}, β {beta:g})", trace=trace, events=events)
+            lr = good_meta["lr"] * wcfg.lr_backoff
+            beta = good_meta["beta"] * wcfg.beta_backoff
+            thetas, m, v = (good_arrays["thetas"], good_arrays["m"],
+                            good_arrays["v"])
+            del trace[good_meta["trace_len"]:]
+            events.append({"event": "rollback", "at_step": t,
+                           "to_step": good_meta["t"], "lr": lr, "beta": beta})
+            t = good_meta["t"]
+            good_meta = dict(good_meta, lr=lr, beta=beta)
+            wd.on_rollback(good_meta["wd"])
+            warnings.warn(
+                f"rank-train divergence watchdog: rolled back to step {t} "
+                f"(rollback {wd.rollbacks}/{wcfg.max_rollbacks}, lr → {lr:g})",
+                RuntimeWarning, stacklevel=2)
+            continue
+
         m = cfg.b1 * m + (1 - cfg.b1) * g
         v = cfg.b2 * v + (1 - cfg.b2) * g * g
         mhat = m / (1 - cfg.b1**t)
         vhat = v / (1 - cfg.b2**t)
-        thetas = thetas - cfg.lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        thetas = thetas - lr * mhat / (jnp.sqrt(vhat) + cfg.eps)
         ks = trunc_lib.theta_to_k(thetas, r_max)
         r_now = trunc_lib.model_ratio(ks, shapes, cfg.remap)
         trace.append(
             dict(step=t, loss=float(loss), task=float(l_task),
-                 ratio_pen=float(l_ratio), r_now=float(r_now))
+                 ratio_pen=float(l_ratio), r_now=float(r_now),
+                 masked_grads=n_masked, spike=flags["spike"],
+                 finite=flags["finite"], lr=lr)
         )
-        if t >= cfg.steps:
-            break
+
+        if not flags["bad"] and t % max(1, every) == 0:
+            good_arrays = {"thetas": thetas, "m": m, "v": v}
+            good_meta = {"t": t, "trace_len": len(trace), "lr": lr,
+                         "beta": beta, "wd": wd.state_dict()}
+            if ckpt is not None:
+                save(t, blocking=policy.blocking)
+            src.release_below(good_meta["t"])
+
+    if ckpt is not None:
+        save(t, blocking=True, preempted=preempted)
+        ckpt.wait()
 
     soft_ks = np.asarray(trunc_lib.theta_to_k(thetas, r_max))
-    return RankTrainResult(thetas=thetas, soft_ks=soft_ks, trace=trace)
+    return RankTrainResult(
+        thetas=thetas, soft_ks=soft_ks, trace=trace, events=events,
+        masked_steps=wd.masked_steps, masked_total=wd.masked_total,
+        rollbacks=wd.rollbacks, preempted=preempted, completed_steps=t)
 
 
 def init_theta(shapes: jnp.ndarray, target_ratio: float, remap: bool = True) -> jnp.ndarray:

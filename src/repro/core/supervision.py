@@ -1,0 +1,145 @@
+"""Supervision for the compression pipeline — the training-side twin of
+`serving/supervisor.py`.
+
+The serving supervisor wraps `ContinuousEngine` so live traffic survives
+preemption, device loss, and overload. This module gives the *producing* side
+of compress-once/serve-many the same treatment: the paper's Algorithm-1
+θ-training and the IPCA calibration stream are long loops whose failure
+shapes are
+
+  preemption   — SIGTERM at step 95/100 must not lose the run. Loops take a
+                 `PreemptionGuard` + `CheckpointPolicy`, commit an atomic
+                 snapshot, and raise `CompressionInterrupted`; launchers exit
+                 0 and `--resume` continues to a byte-identical artifact.
+  divergence   — the stabilized SVD VJP (core/svd.py) still spikes near
+                 equal singular values; masking non-finite gradients keeps a
+                 step alive but a *persistently* diverging run used to emit
+                 garbage θ silently. `DivergenceWatchdog` classifies each
+                 step (non-finite loss/grads, loss spike vs a running EMA),
+                 rolls the loop back to its last good checkpoint with lr/β
+                 backoff after K consecutive bad steps, and raises a terminal
+                 `DivergenceError` carrying the trace once rollbacks are
+                 exhausted.
+  corruption   — handled one layer down: `checkpoint.IntegrityError` +
+                 per-leaf sha256 manifests (checkpoint/checkpointer.py,
+                 artifacts.verify_artifact).
+
+Everything the watchdog tracks is part of the checkpointed loop state
+(`state_dict`/`load_state`), so an interrupted-and-resumed run takes the
+same rollback decisions as an uninterrupted one — bitwise.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+class DivergenceError(RuntimeError):
+    """Rank training diverged past recovery; carries the trace + events so
+    the caller can see *how* instead of receiving garbage θ."""
+
+    def __init__(self, message: str, *, trace: list | None = None,
+                 events: list | None = None):
+        super().__init__(message)
+        self.trace = trace if trace is not None else []
+        self.events = events if events is not None else []
+
+
+class CompressionInterrupted(RuntimeError):
+    """A preemption fired mid-compression after state was committed.
+
+    Not an error condition: launchers catch it, report the committed
+    checkpoint, and exit 0 — rerunning with `--resume` continues losslessly.
+    """
+
+    def __init__(self, message: str, *, stage: str = "", step: int | None = None,
+                 checkpoint_dir: str | None = None):
+        super().__init__(message)
+        self.stage = stage
+        self.step = step
+        self.checkpoint_dir = checkpoint_dir
+
+
+@dataclass(frozen=True)
+class WatchdogConfig:
+    spike_factor: float = 10.0   # loss > factor × EMA ⇒ spike (after warmup)
+    ema_decay: float = 0.9       # loss EMA update on good steps
+    max_bad_steps: int = 5       # K consecutive bad steps ⇒ rollback
+    lr_backoff: float = 0.5      # lr multiplier applied on rollback
+    beta_backoff: float = 1.0    # tanh-β multiplier on rollback (1.0 = off)
+    max_rollbacks: int = 2       # rollbacks before terminal DivergenceError
+    warmup_steps: int = 3        # steps before spike detection engages
+
+
+class DivergenceWatchdog:
+    """Per-step divergence classifier + rollback accounting for train_ranks.
+
+    `observe` is called once per optimizer step with the scalar loss and the
+    number of gradient entries that had to be masked non-finite; it returns
+    the step's flags (recorded in the trace) and maintains the consecutive
+    bad-step streak. The loop asks `should_rollback()` / `exhausted()` and
+    calls `on_rollback(snapshot_state)` when it restores the last good
+    checkpoint. Cumulative counters (masked steps/entries, rollbacks) are
+    monotone across rollbacks — they count observed events, not surviving
+    trajectory steps.
+    """
+
+    def __init__(self, cfg: WatchdogConfig | None = None):
+        self.cfg = cfg or WatchdogConfig()
+        self.ema: float | None = None
+        self.bad_streak = 0
+        self.good_steps = 0
+        self.rollbacks = 0
+        self.masked_steps = 0
+        self.masked_total = 0
+
+    def observe(self, loss: float, n_masked: int, step: int) -> dict:
+        finite = math.isfinite(loss)
+        if n_masked:
+            self.masked_steps += 1
+            self.masked_total += int(n_masked)
+        spike = (finite and self.ema is not None
+                 and self.good_steps >= self.cfg.warmup_steps
+                 and loss > self.cfg.spike_factor * self.ema)
+        bad = (not finite) or bool(n_masked) or spike
+        if bad:
+            self.bad_streak += 1
+        else:
+            self.bad_streak = 0
+            self.good_steps += 1
+            d = self.cfg.ema_decay
+            self.ema = loss if self.ema is None else d * self.ema + (1 - d) * loss
+        return {"finite": finite, "spike": bool(spike), "bad": bad,
+                "masked_grads": int(n_masked)}
+
+    def should_rollback(self) -> bool:
+        return self.bad_streak >= self.cfg.max_bad_steps
+
+    def exhausted(self) -> bool:
+        return self.rollbacks >= self.cfg.max_rollbacks
+
+    def on_rollback(self, snapshot: dict) -> None:
+        """Rewind the trajectory-dependent state (loss EMA, streak, good-step
+        count) to what it was at the restored checkpoint; keep the cumulative
+        event counters and bump the rollback count."""
+        self.ema = snapshot.get("ema")
+        self.good_steps = int(snapshot.get("good_steps", 0))
+        self.bad_streak = 0
+        self.rollbacks += 1
+
+    # -- checkpointable state (must JSON-round-trip exactly) -----------------
+
+    def state_dict(self) -> dict:
+        return {"ema": self.ema, "bad_streak": self.bad_streak,
+                "good_steps": self.good_steps, "rollbacks": self.rollbacks,
+                "masked_steps": self.masked_steps,
+                "masked_total": self.masked_total}
+
+    def load_state(self, d: dict) -> None:
+        self.ema = d.get("ema")
+        self.bad_streak = int(d.get("bad_streak", 0))
+        self.good_steps = int(d.get("good_steps", 0))
+        self.rollbacks = int(d.get("rollbacks", 0))
+        self.masked_steps = int(d.get("masked_steps", 0))
+        self.masked_total = int(d.get("masked_total", 0))

@@ -1,0 +1,82 @@
+"""Compression launcher — `repro.compress` as a resumable CLI.
+
+The full paper pipeline (optional Algorithm-1 θ-training → two-pass IPCA
+calibration → rank plan → factor/remap) with the supervision layer wired in:
+a PreemptionGuard turns SIGTERM/SIGINT into a committed checkpoint + exit 0,
+and rerunning the identical command with `--resume` continues to a
+byte-identical artifact (verified here with `verify_artifact` right after
+save).
+
+  PYTHONPATH=src python -m repro.launch.compress --arch olmo-1b --smoke \
+      --ratio 0.5 --train 40 --ckpt-dir /tmp/ck --out artifacts/olmo-0.5
+
+On preemption the process prints the committed stage/step and exits 0 —
+the same contract as serving drain (launch/serve.py --drain-dir).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro import artifacts
+from repro.configs import get_config, smoke_config, parse_overrides
+from repro.core.supervision import CompressionInterrupted
+from repro.runtime import PreemptionGuard
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ratio", type=float, default=0.4)
+    ap.add_argument("--method", default="dobi",
+                    choices=["dobi", "dobi_noremap", "waterfill", "plain"])
+    ap.add_argument("--train", type=int, default=0,
+                    help="Algorithm-1 θ-training steps (0 = training-free)")
+    ap.add_argument("--train-batch", type=int, default=4)
+    ap.add_argument("--train-seq", type=int, default=32)
+    ap.add_argument("--calib-batches", type=int, default=2)
+    ap.add_argument("--calib-seq", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", required=True, help="artifact output directory")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint root for resumable training/calibration")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from committed checkpoints in --ckpt-dir")
+    ap.add_argument("--set", action="append", default=[])
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.set:
+        cfg = parse_overrides(cfg, args.set)
+
+    guard = PreemptionGuard() if args.ckpt_dir else None
+    print(f"[compress] {cfg.name} ratio={args.ratio} method={args.method} "
+          f"train={args.train}", flush=True)
+    print("READY", flush=True)   # fault-injection tests wait for this line
+    try:
+        art = artifacts.compress(
+            cfg, ratio=args.ratio, method=args.method,
+            calib_batches=args.calib_batches, calib_seq=args.calib_seq,
+            train=args.train, train_batch=args.train_batch,
+            train_seq=args.train_seq, seed=args.seed,
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+            resume=args.resume, guard=guard)
+    except CompressionInterrupted as e:
+        print(f"[compress] preempted during {e.stage} (step {e.step}); "
+              f"checkpoint committed to {e.checkpoint_dir} — rerun with "
+              f"--resume to continue", flush=True)
+        return 0
+
+    art.save(args.out)
+    artifacts.verify_artifact(args.out)      # refuse to ship corrupt bytes
+    print(f"[compress] saved + verified artifact at {args.out} "
+          f"(method={art.method}, achieved_ratio={art.achieved_ratio:.3f}, "
+          f"{art.nbytes()} factor bytes)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

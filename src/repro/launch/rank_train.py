@@ -24,14 +24,17 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.checkpoint import CheckpointPolicy
 from repro.configs import get_config, smoke_config, parse_overrides
 from repro.core import rank_training as rt
+from repro.core.supervision import WatchdogConfig
 from repro.data import SyntheticConfig, sample_batch
 from repro.models import build
 from repro.models.compression import (
     build_rank_train_loss,
     eligible_matrix_shapes,
 )
+from repro.runtime import PreemptionGuard
 
 
 @dataclass
@@ -75,7 +78,10 @@ class RankTrainResult:
 
 def run(cfg, *, ratio: float, steps: int, batch: int = 4, seq: int = 32,
         lr: float = 0.1, svd_rank_cap: int | None = None, seed: int = 0,
-        remap: bool = True, params=None, data_cfg: SyntheticConfig | None = None
+        remap: bool = True, params=None, data_cfg: SyntheticConfig | None = None,
+        ckpt_dir: str | None = None, ckpt_every: int = 10,
+        resume: bool = False, guard=None,
+        watchdog: WatchdogConfig | None = None,
         ) -> RankTrainResult:
     bundle = build(cfg)
     if params is None:
@@ -91,16 +97,19 @@ def run(cfg, *, ratio: float, steps: int, batch: int = 4, seq: int = 32,
     dcfg = data_cfg or SyntheticConfig(vocab_size=cfg.vocab_size, seq_len=seq,
                                        global_batch=batch, seed=seed)
 
-    def batches():
-        step = 0
-        while True:
-            b = sample_batch(dcfg, step)
-            yield {"tokens": jnp.asarray(b["tokens"]),
-                   "targets": jnp.asarray(b["targets"])}
-            step += 1
+    def batch_fn(step: int):
+        # index-addressable (sample_batch is pure in step) — rollback and
+        # resume re-read any step's batch deterministically
+        b = sample_batch(dcfg, step)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "targets": jnp.asarray(b["targets"])}
 
+    policy = (CheckpointPolicy(ckpt_dir, every=ckpt_every)
+              if ckpt_dir else None)
     cfg_rt = rt.RankTrainConfig(target_ratio=ratio, steps=steps, lr=lr, remap=remap)
-    core_result = rt.train_ranks(loss_fn, theta0, shapes, batches(), cfg_rt)
+    core_result = rt.train_ranks(loss_fn, theta0, shapes, batch_fn, cfg_rt,
+                                 policy=policy, guard=guard,
+                                 watchdog=watchdog, resume=resume)
     return RankTrainResult(
         core=core_result,
         soft_ks=dict(zip(names, core_result.soft_ks.tolist())),
@@ -122,17 +131,34 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--json", default="")
     ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint θ/Adam/trace here every --ckpt-every steps")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the latest committed checkpoint in --ckpt-dir")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.set:
         cfg = parse_overrides(cfg, args.set)
 
+    guard = PreemptionGuard() if args.ckpt_dir else None
     result = run(cfg, ratio=args.ratio, steps=args.steps, batch=args.batch,
-                 seq=args.seq)
+                 seq=args.seq, ckpt_dir=args.ckpt_dir or None,
+                 ckpt_every=args.ckpt_every, resume=args.resume, guard=guard)
+    if result.core.preempted:
+        print(f"[rank-train] preempted at step {result.core.completed_steps}/"
+              f"{args.steps}; checkpoint committed to {args.ckpt_dir} — rerun "
+              f"with --resume to continue")
+        return result
     first, last = result.trace[0], result.trace[-1]
     print(f"[rank-train] loss {first['loss']:.4f} → {last['loss']:.4f}; "
           f"R_now {last['r_now']:.3f} (target {args.ratio})")
+    if result.core.masked_steps:
+        print(f"[rank-train] masked non-finite grads on "
+              f"{result.core.masked_steps} step(s) "
+              f"({result.core.masked_total} entries); "
+              f"{result.core.rollbacks} watchdog rollback(s)")
 
     if args.json:
         with open(args.json, "w") as f:

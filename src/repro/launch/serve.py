@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import argparse
 import functools
+import sys
 import time
 import warnings
 
@@ -242,6 +243,14 @@ def main(argv=None):
                          "serve, zero recompression")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="with --ratio: persist the compression artifact")
+    ap.add_argument("--verify-artifact", action="store_true",
+                    help="with --artifact: exhaustive pre-flight integrity "
+                         "check (every leaf byte-verified against both "
+                         "manifests) before anything touches a device")
+    ap.add_argument("--allow-degraded", action="store_true",
+                    help="with --artifact: serve even if integrity "
+                         "verification fails (hash checks skipped; intended "
+                         "for forensics, never production)")
     ap.add_argument("--base-params", default=None, metavar="DIR",
                     help="Checkpointer directory holding the base "
                          "(uncompressed) params pytree; default is a fresh "
@@ -312,6 +321,8 @@ def main(argv=None):
                                       or args.save_artifact):
         ap.error("--artifact serves the saved compression as-is; "
                  "--ratio/--method/--save-artifact cannot be combined with it")
+    if (args.verify_artifact or args.allow_degraded) and args.artifact is None:
+        ap.error("--verify-artifact/--allow-degraded only apply to --artifact")
 
     def base_params(bundle):
         """The base (uncompressed) pytree the compressed leaves merge into."""
@@ -337,10 +348,33 @@ def main(argv=None):
               f"({len(mesh.devices.ravel())} devices)")
 
     if args.artifact is not None:
+        # Integrity gate: corrupted factor bytes must never silently reach a
+        # slot pool serving live traffic. Default load already hash-verifies
+        # each leaf as it is read; --verify-artifact additionally cross-checks
+        # both manifests up front, and --allow-degraded is the ONLY way to
+        # serve bytes that fail verification (loudly, hash checks skipped).
+        if args.verify_artifact and not args.allow_degraded:
+            artifacts.verify_artifact(args.artifact)   # raises IntegrityError
+            print(f"[serve] artifact {args.artifact}: integrity verified")
         # load → apply → serve: no IPCA / rank-train / SVD on this path (and
         # with --mesh, factor leaves land on their TP shards straight from
         # disk — no host round-trip)
-        art = artifacts.load_artifact(args.artifact, mesh=mesh)
+        try:
+            art = artifacts.load_artifact(args.artifact, mesh=mesh,
+                                          verify=not args.allow_degraded)
+        except artifacts.IntegrityError as e:
+            print(f"[serve] REFUSING to serve {args.artifact}: {e}\n"
+                  f"[serve] rerun with --allow-degraded to serve anyway "
+                  f"(forensics only)", file=sys.stderr)
+            raise
+        if args.allow_degraded:
+            issues = artifacts.verify_artifact(args.artifact, strict=False)
+            if issues:
+                warnings.warn(
+                    f"serving DEGRADED artifact {args.artifact}: "
+                    f"{len(issues)} integrity issue(s) ignored "
+                    f"(--allow-degraded): " + "; ".join(issues[:3]),
+                    RuntimeWarning)
         cfg = art.config
         if args.set:
             cfg = parse_overrides(cfg, args.set)

@@ -1,0 +1,61 @@
+"""Artifact integrity checker — `repro.artifacts.verify_artifact` as a CLI.
+
+Cross-checks the artifact manifest, the factor checkpoint's manifest, and the
+bytes on disk (per-leaf sha256 + shape/dtype); prints a per-leaf report and
+exits non-zero on any corruption. This is the pre-flight gate serving uses
+(`launch/serve.py --verify-artifact`) and CI runs after the fault-injection
+compress smoke.
+
+  PYTHONPATH=src python -m repro.launch.verify_artifact artifacts/olmo-0.5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro import artifacts
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("directory", help="artifact directory (contains artifact.json)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-leaf listing, print only the verdict")
+    args = ap.parse_args(argv)
+
+    if not artifacts.is_artifact_dir(args.directory):
+        print(f"[verify-artifact] not an artifact directory: {args.directory} "
+              f"(no artifact.json)", file=sys.stderr)
+        return 2
+
+    with open(os.path.join(args.directory, "artifact.json")) as f:
+        try:
+            manifest = json.load(f)
+        except ValueError:
+            manifest = None
+    if manifest is not None and not args.quiet:
+        n_leaves = sum(len(d) for d in manifest.get("leaves", {}).values())
+        print(f"[verify-artifact] {args.directory}: "
+              f"{len(manifest.get('leaves', {}))} matrices, {n_leaves} leaves")
+        for name, fdict in sorted(manifest.get("leaves", {}).items()):
+            for leaf, ent in sorted(fdict.items()):
+                sha = ent.get("sha256", "")[:12] or "(no hash)"
+                print(f"  {name}/{leaf}: {ent['dtype']} "
+                      f"{tuple(ent['shape'])} sha256={sha}")
+
+    issues = artifacts.verify_artifact(args.directory, strict=False)
+    if issues:
+        print(f"[verify-artifact] FAILED — {len(issues)} issue(s):",
+              file=sys.stderr)
+        for issue in issues:
+            print(f"  {issue}", file=sys.stderr)
+        return 1
+    print(f"[verify-artifact] OK — all leaves match their manifests")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,9 @@ are excluded (paper compresses transformer-block matrices only).
 
 from __future__ import annotations
 
+import dataclasses
 import math
+import os
 import re
 import warnings
 from dataclasses import dataclass
@@ -48,6 +50,7 @@ from repro.core import lowrank as lowrank_lib
 from repro.core import planner as planner_lib
 from repro.core import remap as remap_lib
 from repro.core import truncation as trunc_lib
+from repro.core.supervision import CompressionInterrupted
 from repro.models import layers as L
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
@@ -231,6 +234,19 @@ class CalibRecord:
     n_batches: int = 0
 
 
+def _calib_snapshot(records: dict[str, CalibRecord]) -> dict:
+    """Host pytree of the mid-stream calibration state (raw spectrum SUMS —
+    normalization happens only after the last batch — plus IPCA states).
+    Weights are not snapshotted; resume re-resolves them via _find_weight."""
+    out: dict = {}
+    for name, rec in records.items():
+        ent: dict = {"spectrum": np.asarray(rec.spectrum, np.float64)}
+        if rec.ipca is not None:
+            ent["ipca"] = ipca_lib.ipca_snapshot(rec.ipca)
+        out[name] = ent
+    return {"records": out}
+
+
 def collect_calibration(
     params: dict,
     cfg: ModelConfig,
@@ -239,6 +255,9 @@ def collect_calibration(
     max_rank: int | dict[str, int] | None = None,
     spectra_only: bool = False,
     prefix_embeds: jnp.ndarray | None = None,
+    policy: Any | None = None,       # checkpoint.CheckpointPolicy
+    guard: Any | None = None,        # runtime.PreemptionGuard-like
+    resume: bool = False,
 ) -> dict[str, CalibRecord]:
     """Stream calibration batches; IPCA the activation bases per matrix.
 
@@ -247,8 +266,36 @@ def collect_calibration(
     bases has an isotropic Gram (B·I) and the principal subspace becomes
     arbitrary. `max_rank` is an int or a per-matrix dict (usually the planned
     k); compress_model_params runs two passes: spectra → plan → capped IPCA.
+
+    With a `policy`, the per-matrix state (float64 spectrum sums + IPCA
+    states + batch counts) commits atomically every `policy.every` batches; a
+    firing `guard` commits once more and raises `CompressionInterrupted`
+    (clean preemption — rerun with `resume=True` to continue bitwise, since
+    `token_batches` is an explicit list the resumed run re-receives).
     """
     records: dict[str, CalibRecord] = {}
+    start = 0
+    ckpt = policy.make() if policy is not None else None
+    if ckpt is not None and resume:
+        step = ckpt.latest_step()
+        if step is not None:
+            snap = ckpt.restore_nested(step)     # host numpy: float64 survives
+            extra = ckpt.load_extra(step)
+            start = int(extra["batches"])
+            for name, nb in extra["n_batches"].items():
+                rec = CalibRecord(weight=_find_weight(params, cfg, name))
+                rec.n_batches = int(nb)
+                ent = snap["records"][name]
+                rec.spectrum = np.asarray(ent["spectrum"], np.float64)
+                if "ipca" in ent:
+                    rec.ipca = ipca_lib.ipca_restore(ent["ipca"])
+                records[name] = rec
+
+    def commit(done: int, *, blocking: bool) -> None:
+        ckpt.save(done, _calib_snapshot(records), blocking=blocking,
+                  extra={"batches": done,
+                         "n_batches": {nm: r.n_batches
+                                       for nm, r in records.items()}})
 
     def cap_for(name, w, tokens_n):
         if isinstance(max_rank, dict):
@@ -257,7 +304,18 @@ def collect_calibration(
             cap = max_rank or max(min(w.shape) // 2, 1)
         return max(1, min(cap, min(w.shape), tokens_n))
 
-    for tokens in token_batches:
+    for batch_i, tokens in enumerate(token_batches):
+        if batch_i < start:               # absorbed before the resume point
+            continue
+        if guard is not None and guard.should_stop():
+            if ckpt is not None:
+                commit(batch_i, blocking=True)
+                ckpt.wait()
+            raise CompressionInterrupted(
+                f"calibration preempted after {batch_i}/{len(token_batches)} "
+                f"batches; state committed",
+                stage="calibration", step=batch_i,
+                checkpoint_dir=policy.directory if policy else None)
         captured: dict[str, jnp.ndarray] = {}
 
         def linear(name, p, x):
@@ -292,6 +350,11 @@ def collect_calibration(
             spec = np.asarray(s, np.float64)
             rec.spectrum[: len(spec)] += spec
             rec.n_batches += 1
+        if ckpt is not None and policy.due(batch_i + 1):
+            commit(batch_i + 1, blocking=policy.blocking)
+    if ckpt is not None:
+        commit(len(token_batches), blocking=True)
+        ckpt.wait()
     for rec in records.values():
         rec.spectrum = rec.spectrum / max(rec.n_batches, 1)
     return records
@@ -337,6 +400,9 @@ def compress_model_factors(
     trained_soft_ks: dict[str, float] | None = None,
     quantize: bool | None = None,
     prefix_embeds: jnp.ndarray | None = None,
+    calib_policy: Any | None = None,     # checkpoint.CheckpointPolicy
+    guard: Any | None = None,            # runtime.PreemptionGuard-like
+    resume: bool = False,
 ) -> tuple[dict[str, dict[str, jnp.ndarray]], CompressionReport]:
     """Compress every eligible matrix; returns (factors, unified report).
 
@@ -352,6 +418,11 @@ def compress_model_factors(
                         plan forced (trained_soft_ks ignored);
       * plain         — weight-SVD truncation at a uniform ratio (baseline;
                         needs no calibration batches).
+
+    `calib_policy` makes both calibration passes resumable: pass 1 snapshots
+    under `<dir>/spectra`, pass 2 under `<dir>/ipca`. A firing `guard` raises
+    `CompressionInterrupted` (state committed); rerunning with `resume=True`
+    continues to bitwise-identical factors.
     """
     if method not in _MODEL_METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {_MODEL_METHODS}")
@@ -386,9 +457,16 @@ def compress_model_factors(
                                      remap=False, quantize=False,
                                      provenance=provenance)
 
+    def _sub_policy(sub: str):
+        if calib_policy is None:
+            return None
+        return dataclasses.replace(
+            calib_policy, directory=os.path.join(calib_policy.directory, sub))
+
     # pass 1: spectra only (cheap) → integer rank plan
     spec_records = collect_calibration(
-        params, cfg, token_batches, spectra_only=True, prefix_embeds=prefix_embeds)
+        params, cfg, token_batches, spectra_only=True, prefix_embeds=prefix_embeds,
+        policy=_sub_policy("spectra"), guard=guard, resume=resume)
     names = sorted(spec_records.keys())
     specs = [
         planner_lib.MatrixSpec(nm, int(spec_records[nm].weight.shape[0]),
@@ -406,7 +484,8 @@ def compress_model_factors(
     kmap = dict(zip(names, ks))
     # pass 2: IPCA with per-batch bases truncated at the planned k (Algo 2)
     records = collect_calibration(
-        params, cfg, token_batches, max_rank=kmap, prefix_embeds=prefix_embeds)
+        params, cfg, token_batches, max_rank=kmap, prefix_embeds=prefix_embeds,
+        policy=_sub_policy("ipca"), guard=guard, resume=resume)
 
     # per-matrix factors
     factors = {}

@@ -1,0 +1,373 @@
+"""Resilient compression pipeline (core/supervision.py + checkpoint
+integrity): rank training must checkpoint/resume to bitwise-identical θ,
+mask-but-count non-finite SVD-spike gradients (with a warning), roll back to
+the last good checkpoint on persistent divergence and raise a terminal
+`DivergenceError` once rollbacks are exhausted; IPCA calibration must
+snapshot/restore mid-stream; a corrupted artifact (flipped factor bytes,
+truncated tree.json, deleted COMMIT) must be rejected at load with an
+`IntegrityError` naming the offending leaf; and a real SIGTERM against
+`repro.launch.compress` must exit 0 with a committed checkpoint that
+`--resume` continues from — the compression-side twin of
+test_fault_tolerance.py."""
+
+import json
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from conftest import build_smoke, calib_batches
+from repro import artifacts
+from repro.checkpoint import CheckpointPolicy, Checkpointer, IntegrityError
+from repro.core import rank_training as rt
+from repro.core import ipca as ipca_lib
+from repro.core.supervision import (CompressionInterrupted, DivergenceError,
+                                    WatchdogConfig)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SHAPES = jnp.asarray([[64, 48], [32, 32]], jnp.int32)
+
+
+class TripGuard:
+    """PreemptionGuard stand-in that fires after N should_stop() polls."""
+
+    def __init__(self, after: int):
+        self.after = after
+        self.calls = 0
+
+    def should_stop(self) -> bool:
+        self.calls += 1
+        return self.calls > self.after
+
+
+def _quad_loss(thetas, batch):
+    return jnp.sum((thetas - batch) ** 2)
+
+
+def _batch_fn(i):
+    return jnp.asarray(float(i % 3) * 0.1, jnp.float32)
+
+
+def _poison_loss(thetas, batch):
+    """Finite loss whose gradient is NaN iff batch == 1 (sqrt'(0) = ∞ scaled
+    by 0 — the same shape as the stabilized-SVD spike near equal σ)."""
+    return jnp.sum((thetas - 0.3) ** 2) + jnp.sum(
+        jnp.sqrt(thetas * 0.0 + (1.0 - batch)))
+
+
+# ------------------------------------------------- checkpointer satellites
+
+def test_checkpointer_gcs_orphan_tmp_dirs(tmp_path):
+    d = str(tmp_path / "ck")
+    os.makedirs(os.path.join(d, "step_00000007.tmp"))
+    with open(os.path.join(d, "step_00000007.tmp", "leaf_00000.npy"), "wb") as f:
+        f.write(b"torn write")
+    ck = Checkpointer(d)
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+    assert ck.all_steps() == []          # orphan was never readable
+
+
+def test_restore_validates_leaf_against_manifest_and_like(tmp_path):
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(0, {"a": jnp.zeros((3, 4), jnp.float32),
+                "b": jnp.ones((2,), jnp.float32)})
+    good_like = {"a": jnp.zeros((3, 4), jnp.float32),
+                 "b": jnp.zeros((2,), jnp.float32)}
+    restored = ck.restore(0, good_like)
+    assert restored["a"].shape == (3, 4)
+
+    with pytest.raises(IntegrityError, match="'a'.*shape"):
+        ck.restore(0, {**good_like, "a": jnp.zeros((4, 3), jnp.float32)})
+    with pytest.raises(IntegrityError, match="'b'.*dtype"):
+        ck.restore(0, {**good_like, "b": jnp.zeros((2,), jnp.int32)})
+    with pytest.raises(IntegrityError, match="missing leaf"):
+        ck.restore(0, {**good_like, "c": jnp.zeros((1,), jnp.float32)})
+
+
+def test_checkpoint_hash_mismatch_names_leaf(tmp_path):
+    ck = Checkpointer(str(tmp_path / "ck"))
+    ck.save(0, {"theta": jnp.arange(8, dtype=jnp.float32)})
+    ent = ck.manifest(0)["theta"]
+    path = os.path.join(str(tmp_path / "ck"), "step_00000000", ent["file"])
+    with open(path, "r+b") as f:
+        f.seek(-4, os.SEEK_END)
+        tail = f.read(4)
+        f.seek(-4, os.SEEK_END)
+        f.write(bytes(b ^ 0xFF for b in tail))
+    with pytest.raises(IntegrityError, match="'theta'.*hash mismatch"):
+        ck.restore(0, {"theta": jnp.zeros((8,), jnp.float32)})
+    assert ck.verify(0)                     # non-strict listing agrees
+    # degraded load (verify=False) skips the hash check only
+    ck.restore(0, {"theta": jnp.zeros((8,), jnp.float32)}, verify=False)
+
+
+# ------------------------------------------- rank training: masked grads
+
+def test_masked_grads_counted_and_warned():
+    """One isolated NaN-grad step: masked (training survives) but COUNTED in
+    the trace/result and warned about — never silent (the old line-74 bug)."""
+    theta0 = rt.init_theta(SHAPES, 0.4)
+    batches = lambda i: jnp.asarray(1.0 if i == 3 else 0.0, jnp.float32)
+    cfg = rt.RankTrainConfig(target_ratio=0.4, steps=8, lr=0.05)
+    with pytest.warns(RuntimeWarning, match="non-finite gradient"):
+        res = rt.train_ranks(_poison_loss, theta0, SHAPES, batches, cfg)
+    assert res.completed_steps == 8 and res.rollbacks == 0
+    assert res.masked_steps == 1
+    assert res.masked_total == int(theta0.size)
+    per_step = [e["masked_grads"] for e in res.trace]
+    assert sum(1 for n in per_step if n) == 1
+    assert all(np.isfinite(np.asarray(res.thetas)))
+
+
+def test_watchdog_rolls_back_then_raises_divergence_error():
+    theta0 = rt.init_theta(SHAPES, 0.4)
+    batches = lambda i: jnp.asarray(1.0 if i >= 2 else 0.0, jnp.float32)
+    cfg = rt.RankTrainConfig(target_ratio=0.4, steps=30, lr=0.05)
+    wcfg = WatchdogConfig(max_bad_steps=2, max_rollbacks=1, lr_backoff=0.5)
+    with pytest.raises(DivergenceError) as ei, warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        rt.train_ranks(_poison_loss, theta0, SHAPES, batches, cfg,
+                       watchdog=wcfg)
+    err = ei.value
+    assert err.trace, "DivergenceError must carry the trace"
+    assert [e["event"] for e in err.events] == ["rollback"]
+    assert err.events[0]["to_step"] == 0
+    assert err.events[0]["lr"] == pytest.approx(0.05 * 0.5)   # lr backoff
+
+
+# --------------------------------------- rank training: checkpoint/resume
+
+def test_train_ranks_interrupt_resume_is_bitwise(tmp_path):
+    theta0 = rt.init_theta(SHAPES, 0.4)
+    cfg = rt.RankTrainConfig(target_ratio=0.4, steps=12, lr=0.1)
+    baseline = rt.train_ranks(_quad_loss, theta0, SHAPES, _batch_fn, cfg)
+
+    policy = CheckpointPolicy(str(tmp_path / "ck"), every=4)
+    first = rt.train_ranks(_quad_loss, theta0, SHAPES, _batch_fn, cfg,
+                           policy=policy, guard=TripGuard(6))
+    assert first.preempted and 0 < first.completed_steps < cfg.steps
+    assert Checkpointer(policy.directory).latest_step() is not None
+
+    second = rt.train_ranks(_quad_loss, theta0, SHAPES, _batch_fn, cfg,
+                            policy=policy, resume=True)
+    assert not second.preempted and second.completed_steps == cfg.steps
+    np.testing.assert_array_equal(np.asarray(baseline.thetas),
+                                  np.asarray(second.thetas))
+    assert [e["loss"] for e in second.trace] == \
+        [e["loss"] for e in baseline.trace]
+
+
+def test_train_ranks_legacy_iterable_batches_still_work():
+    """Pre-supervision call shape (generator batches, positional cfg) keeps
+    working; StopIteration ends the run early but cleanly."""
+    theta0 = rt.init_theta(SHAPES, 0.4)
+    gen = (jnp.asarray(0.05, jnp.float32) for _ in range(5))
+    res = rt.train_ranks(_quad_loss, theta0, SHAPES, gen,
+                         rt.RankTrainConfig(target_ratio=0.4, steps=20))
+    assert res.completed_steps == 5 and len(res.trace) == 5
+
+
+# ----------------------------------------------------- resumable IPCA
+
+def test_ipca_fit_stream_interrupt_resume_is_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    bases = [jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+             for _ in range(9)]
+    full, n_full, pre = ipca_lib.ipca_fit_stream(bases, 16, 4)
+    assert n_full == 9 and not pre
+
+    policy = CheckpointPolicy(str(tmp_path / "ipca"), every=3)
+    _, n_part, pre = ipca_lib.ipca_fit_stream(bases, 16, 4, policy=policy,
+                                              guard=TripGuard(5))
+    assert pre and n_part < 9
+    resumed, n_res, pre = ipca_lib.ipca_fit_stream(bases, 16, 4,
+                                                   policy=policy, resume=True)
+    assert n_res == 9 and not pre
+    np.testing.assert_array_equal(np.asarray(full.components),
+                                  np.asarray(resumed.components))
+    np.testing.assert_array_equal(np.asarray(full.weights),
+                                  np.asarray(resumed.weights))
+    assert int(resumed.count) == 9
+
+
+# --------------------------------------------- artifact corruption trio
+
+@pytest.fixture(scope="module")
+def saved_artifact(tmp_path_factory):
+    cfg, bundle, params = build_smoke("olmo-1b")
+    art = repro.compress(cfg, params, ratio=0.5, method="dobi_noremap",
+                         calib=list(calib_batches("olmo-1b")))
+    d = str(tmp_path_factory.mktemp("resilience") / "art")
+    art.save(d)
+    return d
+
+
+def _corrupt_copy(saved, dst):
+    shutil.copytree(saved, dst)
+    return dst
+
+
+def test_verify_artifact_passes_on_intact_artifact(saved_artifact):
+    assert artifacts.verify_artifact(saved_artifact) == []
+    with open(os.path.join(saved_artifact, "artifact.json")) as f:
+        manifest = json.load(f)
+    for fdict in manifest["leaves"].values():
+        for ent in fdict.values():
+            assert len(ent["sha256"]) == 64
+
+
+def test_flipped_factor_bytes_rejected_naming_leaf(saved_artifact, tmp_path):
+    d = _corrupt_copy(saved_artifact, str(tmp_path / "flip"))
+    step_dir = os.path.join(d, "factors", "step_00000000")
+    with open(os.path.join(step_dir, "tree.json")) as f:
+        leaves = json.load(f)["leaves"]
+    victim = sorted(leaves)[0]
+    path = os.path.join(step_dir, leaves[victim]["file"])
+    with open(path, "r+b") as f:
+        f.seek(-6, os.SEEK_END)
+        tail = f.read(6)
+        f.seek(-6, os.SEEK_END)
+        f.write(bytes(b ^ 0xFF for b in tail))
+
+    with pytest.raises(IntegrityError, match=victim.replace(".", r"\.")):
+        artifacts.load_artifact(d)
+    with pytest.raises(IntegrityError, match=victim.replace(".", r"\.")):
+        artifacts.verify_artifact(d)
+    issues = artifacts.verify_artifact(d, strict=False)
+    assert len(issues) == 1 and victim in issues[0]
+    # degraded load skips only the hash pass — shape/dtype still enforced
+    art = artifacts.load_artifact(d, verify=False)
+    assert victim.split("/")[0] in art.factors
+
+
+def test_truncated_tree_json_rejected(saved_artifact, tmp_path):
+    d = _corrupt_copy(saved_artifact, str(tmp_path / "trunc"))
+    path = os.path.join(d, "factors", "step_00000000", "tree.json")
+    blob = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(IntegrityError, match="tree.json"):
+        artifacts.load_artifact(d)
+    assert artifacts.verify_artifact(d, strict=False)
+
+
+def test_deleted_commit_marker_rejected(saved_artifact, tmp_path):
+    d = _corrupt_copy(saved_artifact, str(tmp_path / "nocommit"))
+    os.remove(os.path.join(d, "factors", "step_00000000", "COMMIT"))
+    with pytest.raises(IntegrityError, match="COMMIT"):
+        artifacts.load_artifact(d)
+    issues = artifacts.verify_artifact(d, strict=False)
+    assert issues and "COMMIT" in issues[0]
+
+
+def test_load_missing_artifact_is_still_file_not_found(tmp_path):
+    """Missing-vs-corrupt must stay distinguishable (test_artifact.py pins
+    load; this pins verify_artifact)."""
+    with pytest.raises(FileNotFoundError):
+        artifacts.verify_artifact(str(tmp_path / "nope"))
+
+
+# --------------------------------- facade: injected preemption, bitwise
+
+def test_compress_facade_interrupted_and_resumed_artifact_is_bitwise(tmp_path):
+    """Injected preemption mid-θ-training: `repro.compress` raises
+    `CompressionInterrupted` with committed state, and the resumed call
+    produces factors byte-identical to an uninterrupted run."""
+    cfg, bundle, params = build_smoke("olmo-1b")
+    calib = list(calib_batches("olmo-1b"))
+    kw = dict(ratio=0.5, method="dobi_noremap", calib=calib, train=4,
+              svd_rank_cap=16, seed=0)
+
+    baseline = repro.compress(cfg, params, **kw)
+
+    ck = str(tmp_path / "ck")
+    with pytest.raises(CompressionInterrupted) as ei:
+        repro.compress(cfg, params, **kw, ckpt_dir=ck, ckpt_every=2,
+                       guard=TripGuard(2))
+    assert ei.value.stage == "rank_train"
+    assert Checkpointer(os.path.join(ck, "rank_train")).latest_step() is not None
+
+    resumed = repro.compress(cfg, params, **kw, ckpt_dir=ck, ckpt_every=2,
+                             resume=True)
+    assert resumed.report.ks == baseline.report.ks
+    assert resumed.soft_ks == baseline.soft_ks
+    for nm, fd in baseline.factors.items():
+        for leaf, arr in fd.items():
+            np.testing.assert_array_equal(
+                np.asarray(arr).view(np.uint8),
+                np.asarray(resumed.factors[nm][leaf]).view(np.uint8),
+                err_msg=f"{nm}.{leaf} not bitwise equal after resume")
+    prov = resumed.report.provenance
+    assert prov["train_masked_steps"] == \
+        baseline.report.provenance["train_masked_steps"]
+    assert prov["train_rollbacks"] == \
+        baseline.report.provenance["train_rollbacks"]
+
+
+def test_compress_facade_interrupted_during_calibration(tmp_path):
+    cfg, bundle, params = build_smoke("olmo-1b")
+    calib = list(calib_batches("olmo-1b"))
+    kw = dict(ratio=0.5, method="dobi_noremap", calib=calib, seed=0)
+    baseline = repro.compress(cfg, params, **kw)
+
+    ck = str(tmp_path / "ck")
+    with pytest.raises(CompressionInterrupted) as ei:
+        repro.compress(cfg, params, **kw, ckpt_dir=ck, ckpt_every=1,
+                       guard=TripGuard(1))
+    assert ei.value.stage == "calibration"
+
+    resumed = repro.compress(cfg, params, **kw, ckpt_dir=ck, ckpt_every=1,
+                             resume=True)
+    for nm, fd in baseline.factors.items():
+        for leaf, arr in fd.items():
+            np.testing.assert_array_equal(
+                np.asarray(arr).view(np.uint8),
+                np.asarray(resumed.factors[nm][leaf]).view(np.uint8),
+                err_msg=f"{nm}.{leaf} not bitwise equal after calib resume")
+
+
+# ------------------------------------------------ real-signal preemption
+
+def test_sigterm_compress_subprocess_resumes_cleanly(tmp_path):
+    """End to end with a REAL signal, like the serving drain test: the parent
+    SIGTERMs `repro.launch.compress` mid-run; the child must commit a
+    checkpoint and exit 0; rerunning with --resume must complete and produce
+    an artifact that passes verify_artifact."""
+    ck = str(tmp_path / "ck")
+    out = str(tmp_path / "art")
+    argv = [sys.executable, "-m", "repro.launch.compress", "--arch", "olmo-1b",
+            "--smoke", "--ratio", "0.5", "--train", "10", "--ckpt-dir", ck,
+            "--ckpt-every", "2", "--out", out]
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.Popen(argv, env=env, cwd=REPO, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE, text=True)
+    try:
+        for line in proc.stdout:
+            if "READY" in line:
+                proc.send_signal(signal.SIGTERM)
+                break
+        stdout, stderr = proc.communicate(timeout=240)
+    except Exception:
+        proc.kill()
+        raise
+    assert proc.returncode == 0, stderr
+    assert "preempted" in stdout, stdout + stderr
+    assert not os.path.exists(os.path.join(out, "artifact.json")), \
+        "preempted run must not publish an artifact"
+    assert Checkpointer(os.path.join(ck, "rank_train")).latest_step() is not None
+
+    done = subprocess.run(argv + ["--resume"], env=env, cwd=REPO,
+                          capture_output=True, text=True, timeout=420)
+    assert done.returncode == 0, done.stderr
+    assert "saved + verified artifact" in done.stdout
+    assert artifacts.verify_artifact(out) == []
+    art = artifacts.load_artifact(out)
+    assert art.report.provenance["train_steps"] == 10
