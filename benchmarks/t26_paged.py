@@ -1,0 +1,212 @@
+"""Paged KV cache vs whole-slot serving: memory per request + prefix reuse.
+
+The whole-slot engine reserves `max_len` tokens of KV per occupied slot no
+matter how long the request actually runs, and prefills a shared system
+prompt once PER REQUEST. The paged engine (serving/paged.py) allocates
+fixed-size pages as the sequence actually grows and references the system
+prompt's pages instead of recomputing them. This bench serves one
+shared-system-prompt Poisson trace through both engines on the same virtual
+compute clock and reports:
+
+  * kv_bytes_per_request — whole-slot: the full reserved slot region;
+    paged: pages actually ALLOCATED for the request (shared pages are not
+    re-allocated, so sharing shows up here too). The paged number scales
+    with real sequence length, the whole-slot one is flat at max_len.
+  * prefix-cache hit rate + shared pages (paged only).
+  * requests_per_s for both, best of `passes` timed runs after a warm-up
+    pass (compiles excluded — same protocol as t24).
+
+Per-request tokens from the two engines are asserted bitwise-identical
+(the differential contract tests/test_paged_cache.py pins; here it guards
+the bench against comparing different computations). Writes BENCH_paged.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build
+from repro.serving import (ContinuousEngine, PagedEngine, Request,
+                           VirtualClock)
+from repro.serving.engine import summarize
+
+BENCH_PAGED_PATH = os.path.join(os.path.dirname(__file__), "BENCH_paged.json")
+
+
+def shared_prefix_trace(n_requests, arrival_rate, *, vocab_size, system_len,
+                        suffix_lens, gen_lens, seed=0):
+    """Poisson arrivals; every prompt = one shared system prompt + a random
+    per-request suffix (the traffic shape prefix sharing exists for)."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, vocab_size, size=system_len)
+    reqs, t = [], 0.0
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / arrival_rate))
+        suffix = rng.integers(1, vocab_size,
+                              size=int(rng.choice(suffix_lens)))
+        reqs.append(dict(rid=i,
+                         prompt=np.concatenate([system, suffix]).astype(np.int32),
+                         max_new_tokens=int(rng.choice(gen_lens)),
+                         arrival_time=t, seed=100 + i))
+    return reqs
+
+
+def _kv_token_bytes(engine):
+    """Bytes of full-attention K/V per token position, from the live pool."""
+    total = 0
+    for key, leaf in engine.pool.items():
+        if key == "pages" or not hasattr(leaf, "k"):
+            continue
+        for arr in (leaf.k, leaf.v):
+            if arr.shape[-3] == engine.page_size:    # (*stack, P, ps, KVH, Dh)
+                total += arr.size * arr.dtype.itemsize
+    return total / (engine.num_pages * engine.page_size)
+
+
+def run_paged(bundle, params, specs, *, passes, **kw):
+    engine = PagedEngine(bundle, params, clock=VirtualClock(), **kw)
+    # count pages actually allocated per run (shared pages never hit _alloc)
+    counter = {"pages": 0}
+    orig_alloc = engine._alloc
+
+    def counted(n):
+        counter["pages"] += n
+        return orig_alloc(n)
+
+    engine._alloc = counted
+    mk = lambda: [Request(**s) for s in specs]
+    engine.run(mk())                          # warm-up: all compiles
+    best, results = None, None
+    for _ in range(passes):
+        engine.reset(VirtualClock())
+        counter["pages"] = 0
+        res = engine.run(mk())
+        agg = engine.summarize()
+        if best is None or agg["requests_per_s"] > best["requests_per_s"]:
+            best, results = agg, res
+    token_bytes = _kv_token_bytes(engine)
+    page_bytes = token_bytes * engine.page_size
+    n = max(len(results), 1)
+    return {
+        "requests_per_s": best["requests_per_s"],
+        "latency_p95_s": best["latency_p95_s"],
+        "kv_bytes_per_request": counter["pages"] * page_bytes / n,
+        "pages_allocated": counter["pages"],
+        "page_size": engine.page_size,
+        "prefix_hit_rate": best["paged"]["prefix_hit_rate"],
+        "prefix_hits_full": best["paged"]["prefix_hits_full"],
+        "prefix_hits_partial": best["paged"]["prefix_hits_partial"],
+        "shared_pages": best["paged"]["shared_pages"],
+        "kv_token_bytes": token_bytes,
+    }, results
+
+
+def run_whole_slot(bundle, params, specs, *, passes, max_len, **kw):
+    engine = ContinuousEngine(bundle, params, clock=VirtualClock(),
+                              max_len=max_len, **kw)
+    mk = lambda: [Request(**s) for s in specs]
+    engine.run(mk())                          # warm-up
+    best, results = None, None
+    for _ in range(passes):
+        engine.reset(VirtualClock())
+        res = engine.run(mk())
+        agg = summarize(res)
+        if best is None or agg["requests_per_s"] > best["requests_per_s"]:
+            best, results = agg, res
+    # a slot pins its full max_len KV region for the request's residency,
+    # regardless of actual length — that flat reservation is the comparison
+    token_bytes = 0
+    for key, leaf in engine.pool.items():
+        if hasattr(leaf, "k"):
+            for arr in (leaf.k, leaf.v):
+                if arr.shape[-3] == max_len:
+                    token_bytes += arr.size * arr.dtype.itemsize
+    token_bytes /= engine.num_slots * max_len
+    return {
+        "requests_per_s": best["requests_per_s"],
+        "latency_p95_s": best["latency_p95_s"],
+        "kv_bytes_per_request": token_bytes * max_len,
+        "kv_token_bytes": token_bytes,
+    }, results
+
+
+def run_bench(*, n_requests=16, num_slots=4, chunk=4, arrival_rate=60.0,
+              system_len=24, suffix_lens=(4, 8, 12), gen_lens=(4, 8, 16),
+              page_size=8, max_len=None, passes=3, seed=0, arch="olmo-1b",
+              smoke=True):
+    if smoke:
+        from repro.configs import smoke_config
+        cfg = smoke_config(arch)
+        bundle = build(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+    else:
+        from benchmarks import common
+        cfg, params, _ = common.train_proxy_model()
+        bundle = build(cfg.with_overrides(scan_layers=False))
+        cfg = bundle.cfg
+    if max_len is None:
+        max_len = system_len + max(suffix_lens) + max(gen_lens) + chunk + 8
+        max_len += (-max_len) % page_size
+    specs = shared_prefix_trace(n_requests, arrival_rate,
+                                vocab_size=cfg.vocab_size,
+                                system_len=system_len,
+                                suffix_lens=suffix_lens, gen_lens=gen_lens,
+                                seed=seed)
+    kw = dict(num_slots=num_slots, chunk=chunk, cache_dtype=jnp.float32,
+              temperature=0.7)
+    paged, paged_res = run_paged(bundle, params, specs, passes=passes,
+                                 max_len=max_len, page_size=page_size, **kw)
+    slot, slot_res = run_whole_slot(bundle, params, specs, passes=passes,
+                                    max_len=max_len, **kw)
+    identical = sorted(paged_res) == sorted(slot_res) and all(
+        np.array_equal(paged_res[rid][0], slot_res[rid][0])
+        for rid in paged_res)
+    out = {
+        "backend": jax.default_backend(),
+        "model": cfg.name,
+        "n_requests": n_requests,
+        "num_slots": num_slots,
+        "chunk": chunk,
+        "max_len": max_len,
+        "system_len": system_len,
+        "suffix_lens": list(suffix_lens),
+        "gen_lens": list(gen_lens),
+        "arrival_rate": arrival_rate,
+        "clock": "virtual (measured device compute; compiles excluded)",
+        "whole_slot": slot,
+        "paged": paged,
+        "kv_bytes_saved_frac": 1.0 - paged["kv_bytes_per_request"] / max(
+            slot["kv_bytes_per_request"], 1e-9),
+        "tokens_identical": bool(identical),
+    }
+    with open(BENCH_PAGED_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main(smoke: bool = False):
+    print("\n# T26: paged KV cache vs whole-slot serving (shared system prompt)")
+    kw = dict(n_requests=8, num_slots=2, gen_lens=(4, 8), passes=2) \
+        if smoke else {}
+    bench = run_bench(**kw)
+    s, p = bench["whole_slot"], bench["paged"]
+    print(f"  whole-slot: {s['requests_per_s']:6.2f} req/s  "
+          f"{s['kv_bytes_per_request']/1024:8.1f} KiB KV/request (reserved)")
+    print(f"  paged:      {p['requests_per_s']:6.2f} req/s  "
+          f"{p['kv_bytes_per_request']/1024:8.1f} KiB KV/request (allocated)  "
+          f"hit rate {p['prefix_hit_rate']:.2f}  "
+          f"shared pages {p['shared_pages']}")
+    print(f"  KV bytes saved: {bench['kv_bytes_saved_frac']*100:.0f}%  "
+          f"identical={bench['tokens_identical']}")
+    print(f"  -> {BENCH_PAGED_PATH}")
+    return True
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -164,7 +164,7 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
     import contextlib
 
     from repro.runtime import MetricsLogger, PreemptionGuard
-    from repro.serving import (ContinuousEngine, FailureInjection,
+    from repro.serving import (ContinuousEngine, FailureInjection, PagedEngine,
                                ServingSupervisor, VirtualClock, WallClock,
                                load_snapshot, poisson_trace)
 
@@ -183,11 +183,19 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
             seed=0)
     max_len = args.prompt_len + g + args.chunk + 8
     clock = VirtualClock() if args.virtual_clock else WallClock()
-    engine = ContinuousEngine(
-        bundle, params, num_slots=args.num_slots, max_len=max_len,
-        chunk=args.chunk, eos_id=args.eos_id,
-        cache_dtype=jnp.dtype(cfg.dtype), temperature=args.temperature,
-        clock=clock, mesh=mesh, max_queue=args.max_queue)
+    engine_kw = dict(num_slots=args.num_slots, max_len=max_len,
+                     chunk=args.chunk, eos_id=args.eos_id,
+                     cache_dtype=jnp.dtype(cfg.dtype),
+                     temperature=args.temperature, clock=clock, mesh=mesh,
+                     max_queue=args.max_queue)
+    if args.kv_cache == "paged":
+        # pages round max_len up; tokens are unchanged (the engine masks by
+        # true length) so paged vs slot stays an apples-to-apples comparison
+        engine_kw["max_len"] = max_len + (-max_len) % args.page_size
+        engine = PagedEngine(bundle, params, page_size=args.page_size,
+                             **engine_kw)
+    else:
+        engine = ContinuousEngine(bundle, params, **engine_kw)
     inject = tuple(FailureInjection.parse(s) for s in args.inject_failure)
     guard = PreemptionGuard()       # live SIGTERM/SIGINT → graceful drain
     with contextlib.ExitStack() as stack:
@@ -212,6 +220,14 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
     if agg["rejected"] or agg["requeued"] or sup.recoveries:
         print(f"[serve]   rejected {agg['rejected']}  requeued "
               f"{agg['requeued']}  recoveries {sup.recoveries}")
+    if "paged" in agg:
+        pg = agg["paged"]
+        print(f"[serve]   paged: page_size {pg['page_size']}, "
+              f"{pg['pages_in_use']}/{pg['num_pages']} pages held, "
+              f"prefix hit rate {pg['prefix_hit_rate']:.2f} "
+              f"({pg['prefix_hits_full']} full / "
+              f"{pg['prefix_hits_partial']} partial, "
+              f"{pg['shared_pages']} pages shared)")
     if sup.drained:
         print(f"[serve] drained: {len(results)} finished, "
               f"{len(sup.snapshot['pending'])} pending flushed"
@@ -272,6 +288,14 @@ def main(argv=None):
     ap.add_argument("--virtual-clock", action="store_true",
                     help="--traffic: compute-time virtual clock (no sleeps; "
                          "reproducible) instead of wall clock")
+    ap.add_argument("--kv-cache", choices=("slot", "paged"), default="slot",
+                    help="--traffic KV storage: 'slot' = contiguous max_len "
+                         "region per slot; 'paged' = pooled fixed-size pages "
+                         "with hash-based prefix sharing and bucketed "
+                         "prefill (docs/serving.md §Paged KV cache). Tokens "
+                         "are bitwise-identical either way")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="--kv-cache paged: tokens per KV page")
     ap.add_argument("--max-queue", type=int, default=None, metavar="N",
                     help="--traffic admission control: max requests waiting "
                          "for a slot; arrivals beyond it are rejected with "

@@ -36,6 +36,13 @@ class ModelBundle:
     prefill: Callable                   # (params, batch, cache) -> (logits, cache)
     decode_step: Callable               # (params, token, cache, length) -> (logits, cache)
     init_cache: Callable                # (params, batch, max_len, dtype) -> cache
+    # bucketed prefill: (params, batch, true_len, cache) -> (logits, cache) —
+    # tokens right-padded to a bucket, logits taken at true_len-1. None for
+    # families without a bucketed path (encoder-decoder).
+    prefill_len: Callable | None = None
+    # paged KV storage (serving/paged.py):
+    # (params, batch, max_len, *, page_size, num_pages, dtype) -> cache
+    init_paged_cache: Callable | None = None
 
     # ---- fused generation -------------------------------------------------
     def generate(self, params, batch, gen_len: int, *, eos_id: int | None = None,
@@ -138,6 +145,46 @@ class ModelBundle:
             lambda p: self.init_cache(p, batch, max_len, dtype), params_spec
         )
 
+    def paged_cache_specs(self, batch: int, max_len: int, *, page_size: int,
+                          num_pages: int, dtype=jnp.bfloat16) -> Any:
+        if self.init_paged_cache is None:
+            raise NotImplementedError(
+                f"{self.cfg.family!r} bundles have no paged cache")
+        params_spec = self.param_specs()
+        return jax.eval_shape(
+            lambda p: self.init_paged_cache(
+                p, batch, max_len, page_size=page_size, num_pages=num_pages,
+                dtype=dtype),
+            params_spec,
+        )
+
+    def paged_slot_axes(self, *, page_size: int, num_pages: int,
+                        max_len: int | None = None) -> Any:
+        """Per-leaf slot axis of a PAGED cache pytree (init_paged_cache):
+        a non-negative int for leaves that still carry a slot dim (rings,
+        mamba state, the page table itself), or -1 for pooled page leaves —
+        their rows belong to physical pages, not slots, so a slot insert
+        must address them through the page table instead (serving/paged.py;
+        -1 rather than None so the result stays a leaf under tree.map).
+        Discovered structurally like `cache_slot_axes`: diff 1-slot vs
+        2-slot specs; leaves whose shape does not change have no slot axis."""
+        if max_len is None:
+            max_len = 4 * page_size
+        one = self.paged_cache_specs(1, max_len, page_size=page_size,
+                                     num_pages=num_pages)
+        two = self.paged_cache_specs(2, max_len, page_size=page_size,
+                                     num_pages=num_pages)
+
+        def axis(a, b):
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+            if not diff:
+                return -1
+            if len(diff) != 1:
+                raise ValueError(f"ambiguous slot axis: {a.shape} vs {b.shape}")
+            return diff[0]
+
+        return jax.tree.map(axis, one, two)
+
     def cache_slot_axes(self, max_len: int = 16) -> Any:
         """Per-leaf batch ("slot") axis of the cache pytree, as a pytree of
         ints with the cache's structure.
@@ -180,17 +227,29 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
         return tfm.prefill(params, batch["tokens"], cfg, cache,
                            prefix_embeds=batch.get("prefix_embeds"))
 
+    def prefill_len(params, batch, true_len, cache):
+        return tfm.prefill(params, batch["tokens"], cfg, cache,
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           true_len=true_len)
+
     def decode(params, token, cache, length):
         return tfm.decode_step(params, token, cfg, cache, length)
 
     def init_cache(params, batch, max_len, dtype=jnp.bfloat16):
         return tfm.init_cache(params, cfg, batch, max_len, dtype)
 
+    def init_paged_cache(params, batch, max_len, *, page_size, num_pages,
+                         dtype=jnp.bfloat16):
+        return tfm.init_paged_cache(params, cfg, batch, max_len,
+                                    page_size=page_size, num_pages=num_pages,
+                                    dtype=dtype)
+
     return ModelBundle(
         cfg=cfg,
         init=functools.partial(_init_lm, cfg),
         loss=loss, forward=fwd, prefill=prefill, decode_step=decode,
         init_cache=init_cache,
+        prefill_len=prefill_len, init_paged_cache=init_paged_cache,
     )
 
 

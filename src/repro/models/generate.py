@@ -137,6 +137,12 @@ def make_chunk_loop(decode_step, eos_id: int | None, chunk: int):
     — the batch shape is fixed — but their emitted tokens are frozen to
     `eos_id` and the host discards them; their garbage KV writes land in a
     slot that is fully overwritten by the next admission's `insert`.
+
+    A paged cache (transformer.init_paged_cache) carries its per-slot page
+    table as one more leaf of the same pytree (PAGE_TABLE_KEY); decode_step
+    threads it through the carry read-only, so this loop serves both
+    layouts from the identical signature — dead-row table entries point at
+    the null page, which is how a freed slot's writes are discarded.
     """
 
     def loop(params, tok, cache, lengths, alive, seeds, rng, temperature,

@@ -117,10 +117,25 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int,
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
 
 
+# Key of the per-slot page table inside a paged cache pytree (init_paged_cache).
+# It rides INSIDE the cache so the chunk-loop/decode signatures are unchanged:
+# the page table is just one more donated scan-carry leaf.
+PAGE_TABLE_KEY = "pages"
+
+
 def prefill_attention(
-    p, x, cfg: ModelConfig, cache: KVCache, *, window: int
+    p, x, cfg: ModelConfig, cache: KVCache, *, window: int, true_len=None
 ) -> tuple[jnp.ndarray, KVCache]:
-    """Full-sequence attention that also populates the cache (from position 0)."""
+    """Full-sequence attention that also populates the cache (from position 0).
+
+    `true_len` (traced scalar) marks the real prompt length when `x` has been
+    right-padded to a prefill bucket (serving/paged.py). Causal masking makes
+    every output row < true_len bitwise-independent of the pad tokens; the
+    only place padding could leak is the ring-cache tail selection below,
+    which therefore switches to a true_len-masked scatter. Full-length caches
+    need no change: pad rows land at positions >= true_len, which decode
+    masks out exactly (the same stale-region argument as slot reuse).
+    """
     b, s, _ = x.shape
     positions = jnp.arange(s)
     q, k, v = _project_qkv(p, x, cfg, positions)
@@ -133,7 +148,21 @@ def prefill_attention(
             block_skip=cfg.causal_block_skip, unroll_kv=cfg.unroll_attn_kv,
         )
     s_cache = cache.k.shape[1]
-    if s >= s_cache:
+    if s >= s_cache and true_len is not None:
+        # bucketed prompt over a ring cache: the resident window is
+        # [true_len - s_cache, true_len), not the last s_cache rows of the
+        # padded sequence. Out-of-window rows scatter to slot index s_cache
+        # (out of range) and are dropped; slots the exact-length prefill
+        # would leave untouched stay zero, so the cache states match bitwise.
+        pos = jnp.arange(s)
+        tl = jnp.asarray(true_len, jnp.int32)
+        keep = (pos >= tl - s_cache) & (pos < tl)
+        slots = jnp.where(keep, pos % s_cache, s_cache)
+        new_k = jnp.zeros_like(cache.k).at[:, slots].set(
+            k.astype(cache.k.dtype), mode="drop")
+        new_v = jnp.zeros_like(cache.v).at[:, slots].set(
+            v.astype(cache.v.dtype), mode="drop")
+    elif s >= s_cache:
         # keep the last s_cache entries; ring slot of pos i is i % s_cache
         tail_k, tail_v = k[:, -s_cache:], v[:, -s_cache:]
         slots = (jnp.arange(s - s_cache, s)) % s_cache
@@ -177,9 +206,44 @@ def write_stack_slot(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
     return stacked.at[tuple(idx) + (jnp.arange(b), slot)].set(upd)
 
 
+def paged_write_slot(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
+                     table: jnp.ndarray, length: jnp.ndarray,
+                     page_size: int) -> jnp.ndarray:
+    """Scatter a (B, 1, KVH, Dh) token update into a paged pool leaf
+    (*stack, num_pages, page_size, KVH, Dh): row b's token at position
+    length[b] lands in physical page table[b, length[b] // page_size] at
+    offset length[b] % page_size.
+
+    Retired slots keep advancing their length counters between chunk
+    boundaries; their table rows were reset to the null page (0), and the
+    logical index is clipped into the table, so dead writes land in page 0 —
+    which is never allocated and whose contents only ever enter attention
+    with an exactly-zero softmax weight (positions >= length are masked to
+    -1e30 before the softmax).
+    """
+    b = update.shape[0]
+    upd = update.astype(stacked.dtype).reshape((b,) + update.shape[2:])
+    logical = jnp.clip(length // page_size, 0, table.shape[1] - 1)
+    page = jnp.take_along_axis(table, logical[:, None], axis=1)[:, 0]
+    off = length % page_size
+    return stacked.at[tuple(idx) + (page, off)].set(upd)
+
+
+def paged_read(stacked: jnp.ndarray, idx: tuple, table: jnp.ndarray) -> jnp.ndarray:
+    """Gather a slot-contiguous (B, max_len, KVH, Dh) view of layer `idx` of
+    a paged pool leaf through the page table (B, pages_per_slot). Pure data
+    movement: position j of the view is pool[table[b, j // ps], j % ps], so
+    downstream decode attention is byte-for-byte the computation the
+    whole-slot engine runs (max_len == pages_per_slot * page_size)."""
+    layer = read_stack_slice(stacked, idx)          # (P, ps, KVH, Dh)
+    b, npp = table.shape
+    flat = layer[table.reshape(-1)]                 # (B*npp, ps, KVH, Dh)
+    return flat.reshape((b, npp * layer.shape[1]) + layer.shape[2:])
+
+
 def decode_attention_layer(
     p, x, cfg: ModelConfig, cache: KVCache, length, *, window: int,
-    idx: tuple = (),
+    idx: tuple = (), pages: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, KVCache]:
     """Single-token decode. x: (B, 1, D); `length` = tokens already in cache.
 
@@ -192,12 +256,29 @@ def decode_attention_layer(
     `length` is a scalar (every sequence at the same position) or a (B,)
     vector (continuous batching: each slot decodes at its own position —
     per-slot RoPE positions, per-slot KV write slot, per-slot valid count).
+
+    `pages` (the page table of a paged cache, see init_paged_cache) switches
+    full-attention layers to paged storage: the K/V write scatters through
+    the table and attention runs over a gathered slot-contiguous view —
+    identical shapes and masking to the whole-slot path, so tokens match
+    bitwise. Ring (window > 0) layers ignore `pages`; they are O(window) per
+    slot already and keep their slot axis.
     """
     b = x.shape[0]
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     length = jnp.asarray(length, jnp.int32)
     positions = jnp.full((1,), length, jnp.int32) if length.ndim == 0 else length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions)
+
+    if pages is not None and window == 0:
+        page_size = cache.k.shape[len(idx) + 1]   # (*stack, P, ps, KVH, Dh)
+        vec_len = length if length.ndim else jnp.full((b,), length, jnp.int32)
+        new_k = paged_write_slot(cache.k, k, idx, pages, vec_len, page_size)
+        new_v = paged_write_slot(cache.v, v, idx, pages, vec_len, page_size)
+        layer_k = paged_read(new_k, idx, pages)
+        layer_v = paged_read(new_v, idx, pages)
+        out = L.decode_attention(q, layer_k, layer_v, vec_len + 1)
+        return L.apply_linear(p["wo"], out.reshape(b, 1, -1)), KVCache(new_k, new_v)
 
     s_cache = cache.k.shape[len(idx) + 1]
     slot = length % s_cache
@@ -276,7 +357,11 @@ def apply_block(
     return x + out, aux
 
 
-def prefill_block(p, x, cfg, kind, cache, *, window: int):
+def prefill_block(p, x, cfg, kind, cache, *, window: int, true_len=None):
+    """`true_len` marks the real prompt length of a right-padded (bucketed)
+    prefill — see prefill_attention. Mamba blocks must NOT be fed padded
+    prompts (the recurrent state would absorb the pad tokens); the paged
+    engine uses exact-length prefill for templates containing them."""
     if kind == "mamba":
         h, new_cache = ssm_lib.apply_mamba(
             p["mamba"], _norm(cfg, p["ln1"], x),
@@ -284,7 +369,8 @@ def prefill_block(p, x, cfg, kind, cache, *, window: int):
             return_cache=True,
         )
         return x + h, new_cache
-    h, new_cache = prefill_attention(p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, window=window)
+    h, new_cache = prefill_attention(p["attn"], _norm(cfg, p["ln1"], x), cfg, cache,
+                                     window=window, true_len=true_len)
     x = x + h
     y = _norm(cfg, p["ln2"], x)
     if kind == "moe":
@@ -317,9 +403,10 @@ def tree_write_slice(cache, new, idx: tuple):
 
 
 def decode_block(p, x, cfg, kind, cache, length, *, window: int,
-                 idx: tuple = ()):  # noqa: C901
+                 idx: tuple = (), pages=None):  # noqa: C901
     """Decode one block against a layer-stacked cache (see
-    decode_attention_layer for the `idx` in-place contract)."""
+    decode_attention_layer for the `idx` in-place contract and the paged
+    `pages` contract — mamba blocks always keep per-slot state)."""
     if kind == "mamba":
         h, new_slice = ssm_lib.apply_mamba_decode(
             p["mamba"], _norm(cfg, p["ln1"], x), tree_read_slice(cache, idx),
@@ -328,7 +415,7 @@ def decode_block(p, x, cfg, kind, cache, length, *, window: int,
         return x + h, tree_write_slice(cache, new_slice, idx)
     h, new_cache = decode_attention_layer(
         p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, length, window=window,
-        idx=idx,
+        idx=idx, pages=pages,
     )
     x = x + h
     y = _norm(cfg, p["ln2"], x)
@@ -573,6 +660,77 @@ def init_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(params: dict, cfg: ModelConfig, batch: int, max_len: int,
+                     *, page_size: int, num_pages: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Paged variant of `init_cache` (serving/paged.py, docs/serving.md
+    §Paged KV cache).
+
+    Full-attention (window == 0) KV leaves lose their slot axis and become a
+    shared pool — (*stack, num_pages, page_size, KVH, Dh) — addressed through
+    a per-slot page table stored under PAGE_TABLE_KEY as one more cache leaf:
+    (batch, max_len // page_size) int32, physical page of each slot's logical
+    page. Page 0 is the reserved null page: never allocated by the host-side
+    PagePool, the landing zone for dead-slot writes and clipped lookups, and
+    only ever attended to with an exactly-zero masked weight.
+
+    Sliding-window rings and mamba recurrent state keep their slot axis —
+    they are O(window)/O(1) per slot, so paging them buys nothing and the
+    mamba state is not positionally addressable anyway.
+    """
+    if max_len % page_size:
+        raise ValueError(f"max_len {max_len} must be a multiple of "
+                         f"page_size {page_size} (the gathered per-slot view "
+                         f"must have exactly the whole-slot shape)")
+    if num_pages < 2:
+        raise ValueError("num_pages must be >= 2 (page 0 is the null page)")
+    plan = plan_structure(cfg)
+    w = cfg.sliding_window
+
+    def kv(n_stack, window):
+        if window == 0:
+            shape = tuple(n_stack) + (num_pages, page_size,
+                                      cfg.num_kv_heads, cfg.head_dim)
+            return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+        base = init_kv_cache(cfg, batch, max_len, window, dtype)
+        def tile(a):
+            return jnp.broadcast_to(a, n_stack + a.shape) if n_stack else a
+        return KVCache(tile(base.k), tile(base.v))
+
+    def mamba(n_stack):
+        base = ssm_lib.init_mamba_cache(
+            batch, cfg.d_model, d_state=cfg.ssm_state, expand=cfg.ssm_expand,
+            headdim=cfg.ssm_headdim, conv_width=cfg.ssm_conv_width, dtype=dtype,
+        )
+        def tile(a):
+            return jnp.broadcast_to(a, n_stack + a.shape) if n_stack else a
+        return ssm_lib.MambaCache(tile(base.conv), tile(base.ssm))
+
+    if plan["template"] == "uniform":
+        if plan["kind"] == "mamba":
+            cache = {"blocks": mamba((plan["layers"],))}
+        else:
+            cache = {"blocks": kv((plan["layers"],), w)}
+    elif plan["template"] == "gemma":
+        g, lpg = plan["groups"], plan["local_per_group"]
+        cache = {
+            "local": kv((g, lpg), w),
+            "global": kv((g,), 0),
+        }
+        if plan["rem"]:
+            cache["rem"] = kv((plan["rem"],), w)
+    else:  # zamba
+        g, pg = plan["groups"], plan["per_group"]
+        cache = {
+            "mamba": mamba((g, pg)),
+            "attn": kv((g,), w),
+        }
+        if plan["rem"]:
+            cache["rem"] = mamba((plan["rem"],))
+    cache[PAGE_TABLE_KEY] = jnp.zeros((batch, max_len // page_size), jnp.int32)
+    return cache
+
+
 def prefill(
     params: dict,
     tokens: jnp.ndarray,
@@ -580,8 +738,17 @@ def prefill(
     cache: dict,
     *,
     prefix_embeds: jnp.ndarray | None = None,
+    true_len=None,
 ) -> tuple[jnp.ndarray, dict]:
-    """Run the prompt, fill caches, return logits of the LAST position (B, V)."""
+    """Run the prompt, fill caches, return logits of the LAST position (B, V).
+
+    With `true_len` (a traced scalar), `tokens` may be right-padded to a
+    prefill bucket: the returned logits are the ones at position
+    `true_len - 1` and ring caches hold the window ending at `true_len`
+    (prefill_attention). One executable serves every prompt length in the
+    bucket — the paged engine's bucketed-prefill path. `true_len=None` keeps
+    the original static trace byte-for-byte (every existing caller).
+    """
     x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
@@ -595,7 +762,7 @@ def prefill(
 
         def body(h, xs):
             blk, c = xs
-            h2, nc = prefill_block(blk, h, cfg, kind, c, window=w)
+            h2, nc = prefill_block(blk, h, cfg, kind, c, window=w, true_len=true_len)
             return h2, nc
 
         x, new_cache["blocks"] = scan_or_loop(body, x, (params["blocks"], cache["blocks"]), cfg.scan_layers)
@@ -606,11 +773,12 @@ def prefill(
 
             def local_body(hh, ys):
                 blk, c = ys
-                h2, nc = prefill_block(blk, hh, cfg, "dense", c, window=w)
+                h2, nc = prefill_block(blk, hh, cfg, "dense", c, window=w, true_len=true_len)
                 return h2, nc
 
             h, new_local = scan_or_loop(local_body, h, (local_stack, local_c), cfg.scan_layers)
-            h, new_global = prefill_block(global_blk, h, cfg, "dense", global_c, window=0)
+            h, new_global = prefill_block(global_blk, h, cfg, "dense", global_c,
+                                          window=0, true_len=true_len)
             return h, (new_local, new_global)
 
         x, (nl, ng) = scan_or_loop(
@@ -622,7 +790,7 @@ def prefill(
         if "rem_blocks" in params:
             def rem_body(h, xs):
                 blk, c = xs
-                h2, nc = prefill_block(blk, h, cfg, "dense", c, window=w)
+                h2, nc = prefill_block(blk, h, cfg, "dense", c, window=w, true_len=true_len)
                 return h2, nc
             x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_blocks"], cache["rem"]), cfg.scan_layers)
 
@@ -637,7 +805,7 @@ def prefill(
 
             h, new_m = scan_or_loop(m_body, h, (mamba_stack, mamba_c), cfg.scan_layers)
             h, new_a = prefill_block(params["shared_attn"], h, cfg, "dense", attn_c,
-                                     window=cfg.sliding_window)
+                                     window=cfg.sliding_window, true_len=true_len)
             return h, (new_m, new_a)
 
         x, (nm, na) = scan_or_loop(
@@ -651,7 +819,12 @@ def prefill(
                 return h2, nc
             x, new_cache["rem"] = scan_or_loop(rem_body, x, (params["rem_mamba"], cache["rem"]), cfg.scan_layers)
 
-    x = L.rmsnorm(params["final_norm"], x[:, -1:])
+    if true_len is not None:
+        tl = jnp.asarray(true_len, jnp.int32)
+        x = L.rmsnorm(params["final_norm"],
+                      jax.lax.dynamic_slice_in_dim(x, tl - 1, 1, axis=1))
+    else:
+        x = L.rmsnorm(params["final_norm"], x[:, -1:])
     head = params.get("lm_head")
     if head is None:
         logits = x @ params["embed"].T.astype(x.dtype)
@@ -678,12 +851,20 @@ def decode_step(
     slot decoding at its own position — RoPE, the KV write slot, and the
     attention valid-count are all per-row, and no computation mixes rows, so
     a slot's output depends only on that slot's cache contents.
+
+    Paged contract (serving/paged.py): a cache built by `init_paged_cache`
+    carries its page table under PAGE_TABLE_KEY; full-attention layers then
+    scatter/gather K/V by physical page instead of slicing a contiguous
+    slot. The table is read-only here and returned unchanged — it is one
+    more leaf of the donated chunk-loop carry, updated host-side at
+    admit/retire boundaries only.
     """
     length = jnp.asarray(length, jnp.int32)
     x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
     x = constrain_batch(x * math.sqrt(cfg.d_model))
     plan = plan_structure(cfg)
     w = cfg.sliding_window
+    pages = cache.get(PAGE_TABLE_KEY)
     new_cache: dict = {}
 
     # The layer-stacked caches are scan CARRIES updated in place (one token
@@ -696,7 +877,7 @@ def decode_step(
         def body(carry, xs):
             h, kv = carry
             blk, i = xs
-            h2, kv = decode_block(blk, h, cfg, kind, kv, length, window=w, idx=(i,))
+            h2, kv = decode_block(blk, h, cfg, kind, kv, length, window=w, idx=(i,), pages=pages)
             return (h2, kv), None
 
         (x, new_cache["blocks"]), _ = scan_or_loop(
@@ -714,14 +895,14 @@ def decode_step(
                 hh, lkv = c2
                 blk, j = ys
                 h2, lkv = decode_block(blk, hh, cfg, "dense", lkv, length,
-                                       window=w, idx=(g, j))
+                                       window=w, idx=(g, j), pages=pages)
                 return (h2, lkv), None
 
             (h, local_kv), _ = scan_or_loop(
                 local_body, (h, local_kv), (local_stack, jnp.arange(lpg)),
                 cfg.scan_layers)
             h, global_kv = decode_block(global_blk, h, cfg, "dense", global_kv,
-                                        length, window=0, idx=(g,))
+                                        length, window=0, idx=(g,), pages=pages)
             return (h, local_kv, global_kv), None
 
         (x, nl, ng), _ = scan_or_loop(
@@ -735,7 +916,7 @@ def decode_step(
                 h, kv = carry
                 blk, r = xs
                 h2, kv = decode_block(blk, h, cfg, "dense", kv, length,
-                                      window=w, idx=(r,))
+                                      window=w, idx=(r,), pages=pages)
                 return (h2, kv), None
             (x, new_cache["rem"]), _ = scan_or_loop(
                 rem_body, (x, cache["rem"]),
@@ -758,7 +939,7 @@ def decode_step(
             (h, m_kv), _ = scan_or_loop(
                 m_body, (h, m_kv), (mamba_stack, jnp.arange(pg)), cfg.scan_layers)
             h, a_kv = decode_block(params["shared_attn"], h, cfg, "dense", a_kv,
-                                   length, window=cfg.sliding_window, idx=(g,))
+                                   length, window=cfg.sliding_window, idx=(g,), pages=pages)
             return (h, m_kv, a_kv), None
 
         (x, nm, na), _ = scan_or_loop(
@@ -776,6 +957,9 @@ def decode_step(
             (x, new_cache["rem"]), _ = scan_or_loop(
                 rem_body, (x, cache["rem"]),
                 (params["rem_mamba"], jnp.arange(plan["rem"])), cfg.scan_layers)
+
+    if pages is not None:
+        new_cache[PAGE_TABLE_KEY] = pages   # read-only leaf, carried as-is
 
     x = L.rmsnorm(params["final_norm"], x)
     head = params.get("lm_head")

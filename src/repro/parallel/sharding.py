@@ -209,6 +209,13 @@ def cache_spec(cache: Any, mesh: Mesh, cfg, *, seq_shard: bool = False) -> Any:
                                            S→"data" (sequence parallelism)
       mamba state   (..., B, H, P, N):     batch→data axes, H→"model"
       mamba conv    (..., B, W−1, C):      batch→data axes, C→"model"
+
+    A PAGED pool leaf (models/transformer.py:init_paged_cache) has shape
+    (..., num_pages, page_size, KVH, hd) — it hits the attention-KV rule
+    with the page dim in the batch position, so physical pages shard over
+    the data axes and KV heads over "model" (serving/paged.py sizes
+    num_pages to a multiple of the data axes). The int32 page table falls
+    through to replicated, matching the per-slot host vectors.
     """
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dp_div = 1

@@ -11,9 +11,16 @@ failure story: SIGTERM graceful drain with a resumable queue snapshot,
 elastic device-loss recovery (shrink the mesh, reshard, requeue), and the
 admission-control knobs (`max_queue`, per-request deadlines) the engine
 enforces — docs/serving.md §Failure handling.
+
+`PagedEngine` (paged.py) swaps the whole-slot pool for fixed-size KV pages
+with hash-based prefix sharing and bucketed prefill — bitwise-identical
+tokens at a fraction of the KV memory and prefill dispatches
+(docs/serving.md §Paged KV cache).
 """
 
 from repro.serving.engine import ContinuousEngine
+from repro.serving.paged import PagedEngine
+from repro.serving.pages import PagePool, PoolExhausted, PrefixCache
 from repro.serving.request import (AdmissionError, Request, RequestQueue,
                                    RequestStats)
 from repro.serving.slots import SlotManager
@@ -25,6 +32,10 @@ __all__ = [
     "AdmissionError",
     "ContinuousEngine",
     "FailureInjection",
+    "PagedEngine",
+    "PagePool",
+    "PoolExhausted",
+    "PrefixCache",
     "Request",
     "RequestQueue",
     "RequestStats",

@@ -147,26 +147,66 @@ class ContinuousEngine:
         # A mesh engine is a separate cache entry — sharded traces never mix
         # with single-device ones.
         self.gen = get_engine(bundle, eos_id, mesh)
-        if mesh is None:
-            self._chunk_fn = self.gen.chunk_loop(chunk)
-            self._prefill = self.gen._prefill
-            self._insert = jax.jit(make_slot_insert(bundle.cache_slot_axes()),
-                                   donate_argnums=(0,))
-            self._vec_sharding = None
-        else:
-            self._build_sharded_fns(num_slots)
+        self._build_fns(num_slots)
         # the ONE cache allocation: (num_slots, max_len) per layer, donated
         # through every insert/chunk dispatch for the engine's lifetime
-        self.pool = bundle.init_cache(params, num_slots, max_len=max_len,
-                                      dtype=cache_dtype)
-        if mesh is not None:
-            self.pool = jax.device_put(self.pool, self._pool_sharding)
+        self.pool = self._alloc_pool()
         self.slots = SlotManager(num_slots)
         self.queue = RequestQueue()
         self.results: dict[int, tuple[np.ndarray, RequestStats]] = {}
         self._on_finish: Callable | None = None
         self._scratch = None    # recycled batch-1 admission cache, see _admit
         self.chunks_run = 0
+
+    # ---- subclass hooks ----------------------------------------------------
+    # The paged engine (serving/paged.py) swaps the pool layout and the slot
+    # insert while reusing the whole admit/decode/retire lifecycle; these
+    # hooks are the entire surface it overrides.
+
+    #: trailing host-vector args of the insert callable after (pool, one) —
+    #: 1 for the base engine's (slot,), 2 for the paged (slot, dst_pages).
+    #: `_build_sharded_fns` pins one replicated sharding per vector arg.
+    _insert_vec_args = 1
+
+    def _make_insert(self):
+        """The raw (unjitted) slot-insert callable; `_build_fns` jits it with
+        the pool donated (and, sharded, with pinned in/out shardings)."""
+        return make_slot_insert(self.bundle.cache_slot_axes())
+
+    def _pool_specs(self, num_slots: int):
+        """ShapeDtypeStructs of the pool cache — the source of truth for the
+        pool's pinned sharding (`shardlib.cache_spec` maps slots over data,
+        KV heads over "model"; a paged pool's page dim hits the same rule)."""
+        return self.bundle.cache_specs(num_slots, self.max_len,
+                                       dtype=self.cache_dtype)
+
+    def _alloc_pool(self):
+        """Allocate (and, on a mesh, place) the engine's pool cache."""
+        pool = self.bundle.init_cache(self.params, self.num_slots,
+                                      max_len=self.max_len,
+                                      dtype=self.cache_dtype)
+        if self.mesh is not None:
+            pool = jax.device_put(pool, self._pool_sharding)
+        return pool
+
+    def _build_fns(self, num_slots: int) -> None:
+        """Compile prefill / insert / chunk loop for the current mesh (or
+        single-device). Called at construction and again by `reshard_to`."""
+        if self.mesh is None:
+            self._chunk_fn = self.gen.chunk_loop(self.chunk)
+            self._prefill = self.gen._prefill
+            self._insert = jax.jit(self._make_insert(), donate_argnums=(0,))
+            self._vec_sharding = None
+        else:
+            self._build_sharded_fns(num_slots)
+
+    def snapshot_state(self) -> dict:
+        """Engine-specific state recorded in a drain snapshot
+        (serving/supervisor.py:_flush_snapshot). The base engine's pool holds
+        no cross-request state worth persisting — evicted requests recompute
+        from their prompts — so this is empty; the paged engine reports its
+        page accounting so a resume can assert recompute-from-prompt."""
+        return {}
 
     def _build_sharded_fns(self, num_slots: int) -> None:
         """Compile the mesh engine's prefill / slot-insert / chunk loop with
@@ -183,8 +223,7 @@ class ContinuousEngine:
         rep = NamedSharding(mesh, P())
         self._vec_sharding = rep
         param_sh = self._param_sharding
-        pool_specs = bundle.cache_specs(num_slots, self.max_len,
-                                        dtype=self.cache_dtype)
+        pool_specs = self._pool_specs(num_slots)
         self._pool_sharding = shardlib.make_sharding(
             mesh, shardlib.cache_spec(pool_specs, mesh, cfg))
         one_specs = bundle.cache_specs(1, self.max_len, dtype=self.cache_dtype)
@@ -197,8 +236,9 @@ class ContinuousEngine:
             in_shardings=(param_sh, rep, one_sh),
             out_shardings=(rep, one_sh))
         self._insert = jax.jit(
-            make_slot_insert(bundle.cache_slot_axes()), donate_argnums=(0,),
-            in_shardings=(self._pool_sharding, one_sh, rep),
+            self._make_insert(), donate_argnums=(0,),
+            in_shardings=(self._pool_sharding, one_sh)
+                         + (rep,) * self._insert_vec_args,
             out_shardings=self._pool_sharding)
         # pjit rejects kwargs alongside in_shardings, so the static
         # `do_sample` (fixed at construction by `temperature`) is baked into
@@ -466,11 +506,8 @@ class ContinuousEngine:
                 self.params, mesh))
         self.params = jax.device_put(self.params, self._param_sharding)
         self.gen = get_engine(self.bundle, self.eos_id, mesh)
-        self._build_sharded_fns(self.num_slots)
-        self.pool = self.bundle.init_cache(
-            self.params, self.num_slots, max_len=self.max_len,
-            dtype=self.cache_dtype)
-        self.pool = jax.device_put(self.pool, self._pool_sharding)
+        self._build_fns(self.num_slots)
+        self.pool = self._alloc_pool()
         self._scratch = None
         self.slots = SlotManager(self.num_slots)
 

@@ -1,0 +1,522 @@
+"""Paged continuous-batching engine: pooled fixed-size KV pages + prefix reuse.
+
+`ContinuousEngine` gives every slot a contiguous `max_len` KV region, so KV
+memory scales with the worst case and identical prompt prefixes are stored
+(and prefilled) once per request. This subclass swaps ONLY the storage layout
+and the admission arithmetic — the admit/decode/retire lifecycle, scheduling,
+admission control, and fault-tolerance surface are inherited untouched:
+
+  pool    — full-attention KV lives in `num_pages` fixed pages of
+            `page_size` tokens (models/transformer.py:init_paged_cache);
+            the per-slot page table rides inside the cache pytree under
+            PAGE_TABLE_KEY, so the chunk loop's donated scan carry and its
+            pinned shardings are exactly the whole-slot engine's. The table
+            is rewritten host-side at admit/retire boundaries only and
+            pushed to the device at the next chunk dispatch.
+  admit   — a batch-1 prefill runs at a BUCKET length (prompt right-padded
+            to the next multiple of `page_size`; one cached executable per
+            bucket instead of one per prompt length), then `_insert`
+            scatters the prefilled K/V into this slot's pages. With prefix
+            sharing, full prompt pages whose hash chain is already resident
+            are referenced instead of rewritten, and an exact-prompt repeat
+            skips prefill entirely (serving/pages.py:PrefixCache).
+  decode  — unchanged chunk loop; full-attention layers scatter/gather
+            through the table (transformer.paged_write_slot/paged_read),
+            producing bitwise-identical tokens (tests/test_paged_cache.py
+            replays differential traces against the whole-slot engine).
+  retire  — the slot's page references are released; pages still pinned by
+            the prefix cache survive for future sharing, the rest return to
+            the free list (optionally poisoned — the page-granular stale-KV
+            leak check).
+
+Copy-on-write boundary: decode writes positions >= the prompt length, so
+shared pages must all sit strictly below that boundary. Chain-shared pages
+are full PROMPT pages and satisfy this by construction; a full-prompt hit
+whose last page is partially filled copies that one page (`_copy_page`)
+before referencing it.
+
+Sliding-window rings and mamba state are O(window)/O(1) per slot and keep
+their slot axis (paging them buys nothing); mamba-bearing templates also
+prefill at exact prompt length — padded positions would corrupt the
+recurrent state — trading bucket reuse for correctness on those archs.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.generate import select_token_per_slot
+from repro.models.transformer import PAGE_TABLE_KEY, plan_structure
+from repro.serving.engine import ContinuousEngine
+from repro.serving.pages import PagePool, PoolExhausted, PrefixCache
+from repro.serving.request import Request, RequestStats
+
+
+def _flat_pages(p):
+    """View a (*stack, P, ps, KVH, Dh) pool leaf as (lead, P, ps, KVH, Dh)."""
+    lead = 1
+    for d in p.shape[:-4]:
+        lead *= d
+    return p.reshape((lead,) + p.shape[-4:])
+
+
+def make_paged_insert(axes):
+    """Build `insert(pool, one, slot, dst)`: write a batch-1 prefilled cache
+    into the pool. Non-paged leaves (axis >= 0 in `axes`) overwrite batch
+    offset `slot` exactly like the whole-slot insert; paged leaves (axis -1)
+    are reshaped from (.., 1, max_len, KVH, Dh) to logical pages and
+    scattered to physical pages `dst` (len = pages_per_slot). A `dst` entry
+    of `num_pages` is out of range and DROPPED — how prefix-shared pages and
+    the unused tail of the page budget are skipped without a second
+    executable. Jitted with the pool donated: one in-place dispatch."""
+
+    def insert(pool, one, slot, dst):
+        slot = jnp.asarray(slot, jnp.int32)
+        out = dict(pool)
+        table = out.pop(PAGE_TABLE_KEY)
+
+        def ins(p, o, ax):
+            if ax == -1:
+                ps = p.shape[-3]
+                npp = o.shape[-3] // ps
+                of = o.astype(p.dtype).reshape(
+                    o.shape[:-4] + (npp, ps) + o.shape[-2:])
+                pf = _flat_pages(p)
+                off = of.reshape((pf.shape[0], npp, ps) + of.shape[-2:])
+                return pf.at[:, dst].set(off, mode="drop").reshape(p.shape)
+            starts = tuple(slot if i == ax else 0 for i in range(p.ndim))
+            return jax.lax.dynamic_update_slice(p, o.astype(p.dtype), starts)
+
+        out = jax.tree.map(ins, out, dict(one), axes)
+        out[PAGE_TABLE_KEY] = table
+        return out
+
+    return insert
+
+
+def make_page_copy(axes):
+    """`copy(pool, src, dst)`: duplicate physical page `src` into `dst` on
+    every paged leaf — the copy-on-write for a full-prompt hit whose last
+    page is partially filled. One executable regardless of which pages."""
+
+    def copy(pool, src, dst):
+        out = dict(pool)
+        table = out.pop(PAGE_TABLE_KEY)
+
+        def cp(p, ax):
+            if ax != -1:
+                return p
+            pf = _flat_pages(p)
+            return pf.at[:, dst].set(pf[:, src]).reshape(p.shape)
+
+        out = jax.tree.map(cp, out, axes)
+        out[PAGE_TABLE_KEY] = table
+        return out
+
+    return copy
+
+
+POISON = 123.0   # finite: a leaked poisoned row shifts logits loudly, while
+                 # a correctly-masked one contributes exactly 0 (NaN would
+                 # propagate through the masked region and break the test)
+
+
+def make_pool_poison(axes):
+    """`poison(pool, page)`: fill physical page `page` with POISON on every
+    paged leaf. Debug hook wired to PagePool.freed_hook — any read of a
+    freed page changes tokens, which the differential harness catches."""
+
+    def poison(pool, page):
+        out = dict(pool)
+        table = out.pop(PAGE_TABLE_KEY)
+
+        def px(p, ax):
+            if ax != -1:
+                return p
+            pf = _flat_pages(p)
+            return pf.at[:, page].set(
+                jnp.asarray(POISON, p.dtype)).reshape(p.shape)
+
+        out = jax.tree.map(px, out, axes)
+        out[PAGE_TABLE_KEY] = table
+        return out
+
+    return poison
+
+
+class PagedEngine(ContinuousEngine):
+    """ContinuousEngine over a paged KV pool (module docstring).
+
+    Extra knobs on top of the base engine:
+      page_size        — tokens per KV page; `max_len` must be a multiple.
+      num_pages        — physical pool size. Default gives every slot its
+                         full `max_len` worth plus slack, rounded to a
+                         multiple of 8 so the page dim keeps sharding over
+                         the data axes after an elastic shrink; smaller
+                         values oversubscribe (prefix sharing reclaims the
+                         difference, exhaustion rejects with
+                         "kv_pages_exhausted").
+      prefix_sharing   — hash-chain page reuse + exact-prompt prefill skip.
+      share_partial    — also share page-aligned PARTIAL prefix matches
+                         (full-prompt hits share regardless).
+      prefill_buckets  — explicit bucket lengths (sorted ascending); default
+                         is every multiple of `page_size`.
+      poison_freed     — debug: overwrite freed pages with POISON.
+    """
+
+    _insert_vec_args = 2     # insert(pool, one, slot, dst)
+
+    def __init__(self, bundle, params, *, num_slots: int, max_len: int,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefix_sharing: bool = True, share_partial: bool = True,
+                 prefill_buckets: list[int] | None = None,
+                 poison_freed: bool = False, **kw):
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        if bundle.init_paged_cache is None:
+            raise NotImplementedError(
+                f"{bundle.cfg.family!r} bundles have no paged cache")
+        npp = max_len // page_size
+        if num_pages is None:
+            num_pages = num_slots * npp + 8
+            num_pages += (-num_pages) % 8
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self._prefix_sharing = prefix_sharing
+        self.share_partial = share_partial
+        self.prefill_buckets = sorted(prefill_buckets) if prefill_buckets else None
+        self._poison_freed = poison_freed
+        # padded (bucketed) prefill corrupts mamba recurrent state — those
+        # templates prefill at exact prompt length (one executable per
+        # distinct length, the documented trade-off)
+        plan = plan_structure(bundle.cfg)
+        self._pad_prefill = not (plan["template"] == "zamba"
+                                 or plan.get("kind") == "mamba")
+        axes = bundle.paged_slot_axes(page_size=page_size,
+                                      num_pages=num_pages, max_len=max_len)
+        self._axes = {k: v for k, v in axes.items() if k != PAGE_TABLE_KEY}
+        super().__init__(bundle, params, num_slots=num_slots, max_len=max_len,
+                         **kw)
+
+    # ---- hook overrides ----------------------------------------------------
+    def _make_insert(self):
+        return make_paged_insert(self._axes)
+
+    def _pool_specs(self, num_slots: int):
+        return self.bundle.paged_cache_specs(
+            num_slots, self.max_len, page_size=self.page_size,
+            num_pages=self.num_pages, dtype=self.cache_dtype)
+
+    def _alloc_pool(self):
+        pool = self.bundle.init_paged_cache(
+            self.params, self.num_slots, self.max_len,
+            page_size=self.page_size, num_pages=self.num_pages,
+            dtype=self.cache_dtype)
+        if self.mesh is not None:
+            pool = jax.device_put(pool, self._pool_sharding)
+        # host accounting is born (and reborn, on reshard_to) with the pool:
+        # a fresh pool holds no prefix bytes, so the caches must match
+        self.page_pool = PagePool(self.num_pages, self.page_size)
+        if self._poison_freed:
+            self.page_pool.freed_hook = self._on_pages_freed
+        self.prefix = (PrefixCache(self.page_pool)
+                       if self._prefix_sharing else None)
+        self.table = np.zeros((self.num_slots, self.max_len // self.page_size),
+                              np.int32)
+        self._table_dirty = False
+        return pool
+
+    def _build_fns(self, num_slots: int) -> None:
+        super()._build_fns(num_slots)
+        if self.mesh is None:
+            self._prefill_len = jax.jit(self.bundle.prefill_len,
+                                        donate_argnums=(3,))
+            self._copy_page = jax.jit(make_page_copy(self._axes),
+                                      donate_argnums=(0,))
+            self._poison_fn = jax.jit(make_pool_poison(self._axes),
+                                      donate_argnums=(0,))
+        else:
+            from repro.models.generate import _mesh_scope
+            rep = self._vec_sharding
+            pool_sh = self._pool_sharding
+            self._prefill_len = jax.jit(
+                _mesh_scope(self.bundle.prefill_len, self.mesh),
+                donate_argnums=(3,),
+                in_shardings=(self._param_sharding, rep, rep,
+                              self._one_sharding),
+                out_shardings=(rep, self._one_sharding))
+            self._copy_page = jax.jit(
+                make_page_copy(self._axes), donate_argnums=(0,),
+                in_shardings=(pool_sh, rep, rep), out_shardings=pool_sh)
+            self._poison_fn = jax.jit(
+                make_pool_poison(self._axes), donate_argnums=(0,),
+                in_shardings=(pool_sh, rep), out_shardings=pool_sh)
+
+    def snapshot_state(self) -> dict:
+        """Drain snapshots persist no page bytes: `evict_active` released the
+        evicted slots' references, and resume recomputes every pending
+        request from its prompt — bitwise-lossless by the per-request
+        (seed, position) sampling keys. The snapshot records the accounting
+        so a resume can assert that contract instead of trusting it."""
+        return {
+            "kind": "paged",
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "pages_in_use": int(self.page_pool.num_held),
+            "prefix_entries": (0 if self.prefix is None
+                               else len(self.prefix.chain) + len(self.prefix.full)),
+            "resume": "recompute_from_prompt",
+        }
+
+    # ---- page bookkeeping --------------------------------------------------
+    def _on_pages_freed(self, pages: list[int]) -> None:
+        for pg in pages:
+            self.pool = self._poison_fn(self.pool, jnp.asarray(pg, jnp.int32))
+
+    def _alloc(self, n: int) -> list[int]:
+        """Allocate n pages, evicting LRU prefix-cache pins if the free list
+        is short. Raises PoolExhausted once there is nothing left to evict."""
+        if n <= 0:
+            return []
+        if self.prefix is not None and self.page_pool.num_free < n:
+            self.prefix.evict_for(n)
+        return self.page_pool.alloc(n)
+
+    def _release_slot_pages(self, slot: int) -> None:
+        for pg in self.table[slot]:
+            if pg:
+                self.page_pool.release(int(pg))
+        self.table[slot, :] = 0       # dead-slot decode writes → null page
+        self._table_dirty = True
+
+    def _pages_needed(self, start: int, request: Request) -> int:
+        # the +chunk slack mirrors submit()'s size guard: a slot that hits
+        # EOS or max_new mid-chunk keeps writing until the boundary, and
+        # every such write must land in a page this slot owns
+        return -(-(start + request.max_new_tokens + self.chunk)
+                 // self.page_size)
+
+    def _bucket(self, prompt_len: int) -> int:
+        if self.prefill_buckets:
+            for b in self.prefill_buckets:
+                if b >= prompt_len:
+                    return b
+        return max(self.page_size,
+                   prompt_len + (-prompt_len) % self.page_size)
+
+    def _ensure_scratch(self) -> None:
+        if self._scratch is None:
+            self._scratch = self.bundle.init_cache(
+                self.params, 1, max_len=self.max_len, dtype=self.cache_dtype)
+            if self.mesh is not None:
+                from repro.parallel import sharding as shardlib
+                self._scratch = shardlib.place_cache(
+                    self.mesh, self._scratch, self.bundle.cfg)
+
+    def _nonpaged_snapshot(self, cache1) -> list:
+        """Host copies of the batch-1 cache's non-paged leaves (None at paged
+        positions), taken BEFORE the scratch buffer is donated to the next
+        admission's prefill — the full-prompt entry's ring/mamba state."""
+        flat = jax.tree_util.tree_leaves(cache1)
+        flat_axes = jax.tree_util.tree_leaves(self._axes)
+        return [None if ax == -1 else np.asarray(leaf)
+                for leaf, ax in zip(flat, flat_axes)]
+
+    # ---- lifecycle overrides -----------------------------------------------
+    def _admit(self, request: Request, slot: int) -> None:
+        prompt = [int(t) for t in np.asarray(request.prompt).reshape(-1)]
+        entry = self.prefix.lookup_full(prompt) if self.prefix is not None else None
+        try:
+            if entry is not None:
+                self._admit_from_cache(request, slot, prompt, entry)
+            else:
+                self._admit_prefill(request, slot, prompt)
+        except PoolExhausted:
+            # not a structural rejection: the pool is oversubscribed right
+            # now. Recorded like every other rejection — callers that want
+            # retry semantics requeue on the reject callback.
+            self._reject(request, "kv_pages_exhausted")
+
+    def _start_stats(self, request: Request) -> RequestStats:
+        stats = RequestStats(rid=request.rid, arrival_time=request.arrival_time,
+                             prompt_len=len(request.prompt))
+        stats.admit_time = self.clock.now()
+        return stats
+
+    def _finish_admit(self, request: Request, slot: int, stats: RequestStats,
+                      logits, start: int, t0: float) -> None:
+        tok0 = select_token_per_slot(
+            logits, self.rng, jnp.asarray([request.seed], jnp.int32),
+            jnp.asarray([start], jnp.int32),
+            jnp.asarray(self.temperature, jnp.float32), self.do_sample)
+        tok0 = int(jax.block_until_ready(tok0)[0])
+        self.clock.advance(time.perf_counter() - t0)
+        stats.first_token_time = self.clock.now()
+        self.slots.admit(slot, request, stats, tok0, start)
+        self.admitted += 1
+        if request.on_token is not None:
+            request.on_token(request, tok0)
+        if request.max_new_tokens == 1 or (self.eos_id is not None
+                                           and tok0 == self.eos_id):
+            self._retire(slot)
+
+    def _admit_prefill(self, request: Request, slot: int,
+                       prompt: list[int]) -> None:
+        stats = self._start_stats(request)
+        t0 = time.perf_counter()
+        ps = self.page_size
+        npp = self.max_len // ps
+        start = self.gen.start_length(len(prompt))
+        pages_needed = self._pages_needed(start, request)
+
+        shared: list[int] = []
+        if self.prefix is not None and self.share_partial:
+            # chain hits are full PROMPT pages; the slice guards the COW
+            # boundary (a shared page must never overlap decode's writable
+            # region, positions >= start)
+            shared = self.prefix.lookup_partial(prompt)[:start // ps]
+            for pg in shared:
+                self.page_pool.retain(pg)
+        try:
+            own = self._alloc(pages_needed - len(shared))
+        except PoolExhausted:
+            for pg in shared:
+                self.page_pool.release(pg)
+            raise
+        row = shared + own
+
+        self._ensure_scratch()
+        if self._pad_prefill:
+            bucket = self._bucket(len(prompt))
+            padded = np.zeros(bucket, np.int32)
+            padded[:len(prompt)] = prompt
+            logits, cache1 = self._prefill_len(
+                self.params, {"tokens": jnp.asarray(padded)[None]},
+                jnp.asarray(len(prompt), jnp.int32), self._scratch)
+        else:
+            logits, cache1 = self._prefill(
+                self.params,
+                {"tokens": jnp.asarray(prompt, dtype=jnp.int32)[None]},
+                self._scratch)
+
+        # scatter own pages only; shared pages hold identical bytes already
+        # (same prompt prefix ⇒ same bucket ⇒ same executable) and stay
+        # read-only, dropped via the out-of-range sentinel
+        dst = np.full(npp, self.num_pages, np.int32)
+        dst[len(shared):pages_needed] = own
+        self.pool = self._insert(self.pool, cache1, slot, jnp.asarray(dst))
+
+        if self.prefix is not None:
+            n_prompt = -(-len(prompt) // ps)
+            self.prefix.register(prompt, row[:n_prompt],
+                                 logits=np.asarray(logits),
+                                 leaves=self._nonpaged_snapshot(cache1))
+        self._scratch = cache1
+        self.table[slot, :] = 0
+        self.table[slot, :pages_needed] = row
+        self._table_dirty = True
+        self._finish_admit(request, slot, stats, logits, start, t0)
+
+    def _admit_from_cache(self, request: Request, slot: int,
+                          prompt: list[int], entry) -> None:
+        """Exact-prompt hit: no prefill dispatch at all. Prompt pages are
+        referenced from the cache entry (the partially-filled tail page, if
+        any, copied-on-write first), the non-paged leaves are restored from
+        the entry's host snapshot through the SAME insert executable, and
+        the first token is sampled from the stored prefill logits — all
+        bitwise-identical to having run the prefill (same bytes in, same
+        sampling fold keys)."""
+        stats = self._start_stats(request)
+        t0 = time.perf_counter()
+        ps = self.page_size
+        npp = self.max_len // ps
+        start = self.gen.start_length(len(prompt))
+        pages_needed = self._pages_needed(start, request)
+
+        shared = list(entry.pages)
+        cow_src = shared.pop() if start % ps else None
+        for pg in shared:
+            self.page_pool.retain(pg)
+        try:
+            own = self._alloc(pages_needed - len(shared))
+        except PoolExhausted:
+            for pg in shared:
+                self.page_pool.release(pg)
+            raise
+        if cow_src is not None:
+            self.pool = self._copy_page(self.pool,
+                                        jnp.asarray(cow_src, jnp.int32),
+                                        jnp.asarray(own[0], jnp.int32))
+        row = shared + own
+
+        # restore ring/mamba leaves via the normal insert; every paged-leaf
+        # update is dropped (prompt pages are shared or copied, generation
+        # pages get written by decode before they are ever read)
+        self._ensure_scratch()
+        flat_scratch, treedef = jax.tree_util.tree_flatten(self._scratch)
+        # restored host leaves must land on the SAME sharding the prefill
+        # output has, or the pinned insert would trace a second executable
+        # on a mesh (uncommitted vs mesh-sharded avals)
+        flat_sh = (jax.tree_util.tree_leaves(self._one_sharding)
+                   if self.mesh is not None else [None] * len(flat_scratch))
+        one = jax.tree_util.tree_unflatten(
+            treedef, [s if stored is None
+                      else (jnp.asarray(stored) if sh is None
+                            else jax.device_put(jnp.asarray(stored), sh))
+                      for s, stored, sh in
+                      zip(flat_scratch, entry.leaves, flat_sh)])
+        dst = np.full(npp, self.num_pages, np.int32)
+        self.pool = self._insert(self.pool, one, slot, jnp.asarray(dst))
+
+        self.table[slot, :] = 0
+        self.table[slot, :pages_needed] = row
+        self._table_dirty = True
+        self._finish_admit(request, slot, stats,
+                           jnp.asarray(entry.logits), start, t0)
+
+    def _step_chunk(self) -> None:
+        if self._table_dirty:
+            table = jnp.asarray(self.table)
+            if self.mesh is not None:
+                table = jax.device_put(table,
+                                       self._pool_sharding[PAGE_TABLE_KEY])
+            self.pool = {**self.pool, PAGE_TABLE_KEY: table}
+            self._table_dirty = False
+        super()._step_chunk()
+
+    def _retire(self, slot: int) -> None:
+        self._release_slot_pages(slot)
+        super()._retire(slot)
+
+    def evict_active(self) -> list[Request]:
+        for slot in self.slots.active_slots():
+            self._release_slot_pages(slot)
+        return super().evict_active()
+
+    # ---- maintenance -------------------------------------------------------
+    def reset(self, clock) -> None:
+        super().reset(clock)
+        if self.prefix is not None:
+            self.prefix.clear()
+            self.prefix.hits_full = self.prefix.hits_partial = 0
+            self.prefix.misses = self.prefix.shared_pages = 0
+        self.page_pool.check()
+
+    def summarize(self) -> dict:
+        agg = super().summarize()
+        agg["paged"] = {
+            "page_size": self.page_size,
+            "num_pages": self.num_pages,
+            "pages_in_use": int(self.page_pool.num_held),
+            "prefix_hits_full": 0 if self.prefix is None else self.prefix.hits_full,
+            "prefix_hits_partial": 0 if self.prefix is None else self.prefix.hits_partial,
+            "prefix_misses": 0 if self.prefix is None else self.prefix.misses,
+            "prefix_hit_rate": 0.0 if self.prefix is None else self.prefix.hit_rate,
+            "shared_pages": 0 if self.prefix is None else self.prefix.shared_pages,
+        }
+        return agg

@@ -1,0 +1,265 @@
+"""Host-side page-pool accounting and prefix cache for the paged KV engine.
+
+The device side of paged serving is pure data movement (models/transformer.py:
+paged_read / paged_write_slot); everything that *decides* which physical page
+holds what lives here, on the host, as plain integers:
+
+  PagePool     — refcounted free-list allocator over `num_pages` physical
+                 pages. Page 0 is the reserved null page: never allocated,
+                 never freed; dead-slot writes and clipped table lookups land
+                 there and only ever enter attention with an exactly-zero
+                 masked weight. A page's refcount counts every holder — one
+                 per slot whose table references it, plus one per prefix-cache
+                 entry that pins it.
+
+  PrefixCache  — vLLM-style hash-chain sharing. Every FULL page of a prompt
+                 gets a chain key that commits to all tokens up to and
+                 including that page, so equal keys imply equal page-aligned
+                 prefixes; the map chain-key → physical page lets a new
+                 request reference the prefix pages instead of storing its
+                 own copy. A second map, full-prompt hash → admission state
+                 (pages + first-token logits + the non-paged cache leaves),
+                 lets an *identical* prompt skip prefill entirely. Both maps
+                 hold one reference per pinned page; LRU eviction releases
+                 them when the pool runs dry.
+
+Copy-on-write is the engine's job (serving/paged.py): decode writes K/V at
+positions >= the prompt length, so any referenced page overlapping the
+writable region — only ever the final, partially-filled page — is copied to a
+fresh page at admission; fully-filled prefix pages are shared read-only.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+NULL_PAGE = 0
+
+
+class PoolExhausted(RuntimeError):
+    """Raised by PagePool.alloc when the free list cannot cover a request
+    (after the engine has already evicted prefix-cache entries)."""
+
+
+class PagePool:
+    """Refcounted allocator over physical KV pages (host bookkeeping only).
+
+    Invariants (checked by `check()`, asserted after every differential
+    trace in tests/test_paged_cache.py):
+      * pages partition into {null} ∪ {ref > 0} ∪ {free list} — no page is
+        both held and free, none is lost;
+      * the free list holds no duplicates (double-free raises immediately);
+      * the null page is permanently pinned (ref 1, never allocated/freed).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.refs = np.zeros(num_pages, np.int32)
+        self.refs[NULL_PAGE] = 1          # pinned forever
+        # LIFO free list: hot pages are reused first (better locality, and
+        # the poison test exercises reuse-after-free on every trace)
+        self._free = list(range(num_pages - 1, 0, -1))
+        # test hook: called with the page ids returning to the free list so
+        # the paged engine can poison their device contents
+        self.freed_hook: Callable[[list[int]], None] | None = None
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_held(self) -> int:
+        """Pages with a positive refcount, excluding the null page."""
+        return int((self.refs[1:] > 0).sum())
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"need {n} pages, {len(self._free)} free "
+                f"(pool of {self.num_pages}, page_size {self.page_size})")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        return pages
+
+    def retain(self, page: int) -> None:
+        if page == NULL_PAGE:
+            raise ValueError("retain of the null page")
+        if self.refs[page] <= 0:
+            raise ValueError(f"retain of free page {page}")
+        self.refs[page] += 1
+
+    def release(self, page: int) -> None:
+        if page == NULL_PAGE:
+            raise ValueError("release of the null page")
+        if self.refs[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self.refs[page] -= 1
+        if self.refs[page] == 0:
+            self._free.append(page)
+            if self.freed_hook is not None:
+                self.freed_hook([page])
+
+    def check(self) -> None:
+        """Assert the pool invariants; raises AssertionError on violation."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert NULL_PAGE not in free, "null page on the free list"
+        assert self.refs[NULL_PAGE] == 1, "null page refcount disturbed"
+        for p in range(1, self.num_pages):
+            held = self.refs[p] > 0
+            assert held != (p in free), (
+                f"page {p}: ref={self.refs[p]}, free={p in free} "
+                f"(leak or double-free)")
+
+
+def page_chain_keys(prompt: Sequence[int], page_size: int) -> list[str]:
+    """Chain key of every FULL page of `prompt`: key_i commits to all tokens
+    of pages 0..i (vLLM-style), so equal keys ⇒ equal page-aligned prefixes.
+    The final partial page (if any) has no key — it is writable at decode
+    time and never shared."""
+    keys: list[str] = []
+    h = "root"
+    for i in range(len(prompt) // page_size):
+        blk = ",".join(str(int(t)) for t in
+                       prompt[i * page_size:(i + 1) * page_size])
+        h = hashlib.sha1(f"{h}|{blk}".encode()).hexdigest()
+        keys.append(h)
+    return keys
+
+
+def prompt_key(prompt: Sequence[int]) -> str:
+    return hashlib.sha1(",".join(str(int(t)) for t in prompt).encode()).hexdigest()
+
+
+@dataclass
+class FullEntry:
+    """Complete admission state for one exact prompt: enough to skip prefill.
+
+    `pages` covers ceil(prompt_len / page_size) physical pages (pinned);
+    `logits` is the prefill's last-real-position logits row (host copy) the
+    first token is sampled from — per-request (seed, position) sampling keys
+    make that bitwise-identical to a fresh prefill for any request; `leaves`
+    is the flat list of the batch-1 cache's NON-paged leaves as host arrays
+    (rings, mamba state — paged-leaf positions hold None), written into the
+    pool slot at admission exactly like a prefilled cache would be.
+    """
+    prompt_len: int
+    pages: tuple[int, ...]
+    logits: np.ndarray
+    leaves: list[Any] = field(default_factory=list)
+
+
+class PrefixCache:
+    """Hash-chain page sharing + full-prompt prefill skip (module docstring).
+
+    Holds one PagePool reference per pinned page (a page pinned by both the
+    chain map and a full entry carries one reference from each). `evict_for`
+    drops LRU full entries first (they pin partial tail pages a chain entry
+    never covers), then LRU chain entries, until enough pages are free.
+    """
+
+    def __init__(self, pool: PagePool, *, max_full_entries: int = 64):
+        self.pool = pool
+        self.max_full_entries = max_full_entries
+        self.chain: OrderedDict[str, int] = OrderedDict()      # key -> page
+        self.full: OrderedDict[str, FullEntry] = OrderedDict()
+        self.hits_full = 0
+        self.hits_partial = 0
+        self.misses = 0
+        self.shared_pages = 0     # pages a request referenced instead of storing
+
+    # ---- lookup -----------------------------------------------------------
+    def lookup_full(self, prompt: Sequence[int]) -> FullEntry | None:
+        entry = self.full.get(prompt_key(prompt))
+        if entry is not None:
+            self.full.move_to_end(prompt_key(prompt))
+            self.hits_full += 1
+            self.shared_pages += len(entry.pages)
+        return entry
+
+    def lookup_partial(self, prompt: Sequence[int]) -> list[int]:
+        """Longest page-aligned shared prefix: physical pages for full pages
+        0..k of `prompt` already resident in the chain map. The caller must
+        `retain` each returned page before any operation that could evict."""
+        pages: list[int] = []
+        for key in page_chain_keys(prompt, self.pool.page_size):
+            page = self.chain.get(key)
+            if page is None:
+                break
+            self.chain.move_to_end(key)
+            pages.append(page)
+        if pages:
+            self.hits_partial += 1
+            self.shared_pages += len(pages)
+        else:
+            self.misses += 1
+        return pages
+
+    # ---- registration ------------------------------------------------------
+    def register(self, prompt: Sequence[int], pages: Sequence[int], *,
+                 logits: np.ndarray, leaves: list[Any]) -> None:
+        """Pin this admission's prompt pages for future sharing. `pages` is
+        the slot's table row; only the ceil(prompt_len / page_size) prompt
+        pages are pinned — pages covering the yet-unwritten generation
+        budget are not shareable."""
+        ps = self.pool.page_size
+        n_prompt = -(-len(prompt) // ps)
+        for key, page in zip(page_chain_keys(prompt, ps), pages):
+            if key not in self.chain:
+                self.pool.retain(page)
+                self.chain[key] = page
+        pkey = prompt_key(prompt)
+        if pkey not in self.full:
+            entry = FullEntry(prompt_len=len(prompt),
+                              pages=tuple(pages[:n_prompt]),
+                              logits=np.asarray(logits), leaves=leaves)
+            for page in entry.pages:
+                self.pool.retain(page)
+            self.full[pkey] = entry
+            while len(self.full) > self.max_full_entries:
+                self._pop_full()
+
+    # ---- eviction ----------------------------------------------------------
+    def _pop_full(self) -> bool:
+        if not self.full:
+            return False
+        _, entry = self.full.popitem(last=False)
+        for page in entry.pages:
+            self.pool.release(page)
+        return True
+
+    def _pop_chain(self) -> bool:
+        if not self.chain:
+            return False
+        _, page = self.chain.popitem(last=False)
+        self.pool.release(page)
+        return True
+
+    def evict_for(self, pages_needed: int) -> None:
+        """Release LRU-pinned pages until `pages_needed` are free (or the
+        cache is empty — the caller's alloc then raises PoolExhausted).
+        Releasing a page a live slot still references only drops the cache's
+        pin; the page stays allocated until that slot retires."""
+        while self.pool.num_free < pages_needed:
+            if not self._pop_full() and not self._pop_chain():
+                return
+
+    def clear(self) -> None:
+        while self._pop_full():
+            pass
+        while self._pop_chain():
+            pass
+
+    @property
+    def hit_rate(self) -> float:
+        looked = self.hits_full + self.hits_partial + self.misses
+        return (self.hits_full + self.hits_partial) / looked if looked else 0.0

@@ -252,6 +252,10 @@ class ServingSupervisor:
             "pending": [r.to_json() for r in pending],
             "rejected": {str(rid): reason
                          for rid, reason in eng.rejected.items()},
+            # engine-specific state (e.g. the paged engine's page accounting
+            # after eviction) — resume asserts recompute-from-prompt against
+            # this instead of trusting it (tests/test_fault_tolerance.py)
+            "engine": eng.snapshot_state(),
         }
         if self.drain_dir is not None:
             os.makedirs(self.drain_dir, exist_ok=True)

@@ -1,0 +1,138 @@
+"""Seeded serving-trace generator + differential replay helpers.
+
+A *trace* is a plain list of request specs (dicts of Request kwargs) drawn
+from a seeded RNG: staggered Poisson-ish arrivals, a pool of shared system
+prompts (so prefixes collide — the traffic shape prefix sharing exists for),
+exact-duplicate prompts (full-prefill-skip hits), divergent suffixes, a mix
+of generation lengths, and optional per-request deadlines that expire some
+requests while they wait.
+
+Replaying the SAME trace through the whole-slot `ContinuousEngine` and the
+`PagedEngine` must produce bitwise-identical per-request tokens — per-request
+(seed, position) sampling keys make tokens independent of batch composition,
+slot assignment, and storage layout, so any divergence is a paged-cache bug,
+not scheduling noise. `run_trace` replays a trace on one engine (optionally
+evicting + requeueing mid-run, the fault-tolerance shape); `assert_same_results`
+is the bitwise comparator. tests/test_paged_cache.py drives these.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving import Request, VirtualClock
+
+
+def make_trace(seed: int, *, vocab_size: int, n_requests: int = 10,
+               n_system_prompts: int = 2, system_len: int = 12,
+               suffix_max: int = 8, gen_max: int = 12,
+               dup_every: int = 4, deadline_every: int = 0,
+               arrival_scale: float = 0.01) -> list[dict]:
+    """Seeded randomized trace (list of Request kwargs, JSON-simple).
+
+    Every `dup_every`-th request reuses a previous request's exact prompt
+    (full prefix hit); otherwise requests alternate between a shared system
+    prompt + random suffix (partial hit) and a fully random prompt (miss).
+    `deadline_every` > 0 gives every n-th request a deadline so tight it
+    expires while waiting — exercising expiry under BOTH engines identically.
+    """
+    rng = np.random.default_rng(seed)
+    system = [rng.integers(1, vocab_size, size=system_len).tolist()
+              for _ in range(n_system_prompts)]
+    specs: list[dict] = []
+    t = 0.0
+    for i in range(n_requests):
+        t += float(rng.exponential(arrival_scale))
+        if dup_every and i and i % dup_every == 0:
+            prompt = list(specs[int(rng.integers(0, i))]["prompt"])
+        elif i % 2 == 0:
+            base = system[int(rng.integers(0, n_system_prompts))]
+            suffix = rng.integers(1, vocab_size,
+                                  size=int(rng.integers(1, suffix_max + 1)))
+            prompt = base + suffix.tolist()
+        else:
+            prompt = rng.integers(
+                1, vocab_size,
+                size=int(rng.integers(3, system_len + suffix_max))).tolist()
+        spec = dict(rid=i, prompt=prompt,
+                    max_new_tokens=int(rng.integers(2, gen_max + 1)),
+                    arrival_time=t, seed=1000 + i)
+        if deadline_every and i % deadline_every == deadline_every - 1:
+            # already expired when it first becomes schedulable (now >=
+            # arrival > deadline) — deterministic under BOTH engines even
+            # though chunk wall-times differ between them
+            spec["deadline"] = t - 1.0
+        specs.append(spec)
+    return specs
+
+
+def to_requests(specs: list[dict]) -> list[Request]:
+    return [Request(**{**s, "prompt": np.asarray(s["prompt"], np.int32)})
+            for s in specs]
+
+
+def run_trace(engine, specs: list[dict], *, evict_at_chunk: int | None = None):
+    """Replay a trace to completion; returns {rid: token list}.
+
+    With `evict_at_chunk`, the run is interrupted after that many chunks:
+    every in-flight request is evicted (its slot KV discarded — pages
+    released, on the paged engine) and requeued for recompute-from-prompt,
+    then serving continues. Bitwise-equal results prove eviction loses
+    nothing — and, paged, that releasing/reallocating pages mid-workload
+    keeps the table bookkeeping exact.
+    """
+    for r in to_requests(specs):
+        try:
+            engine.submit(r)
+        except Exception:
+            pass    # structural rejections are recorded in engine.rejected
+    interrupted = evict_at_chunk is not None
+    while engine.has_work():
+        engine._try_admit()
+        if engine.slots.num_active == 0:
+            nxt = engine.queue.next_arrival()
+            if nxt is None:
+                break
+            engine.clock.wait_until(nxt)
+            continue
+        engine._step_chunk()
+        if interrupted and engine.chunks_run >= evict_at_chunk:
+            interrupted = False
+            for req in engine.evict_active():
+                engine.requeue(req)
+    return {rid: toks.tolist() for rid, (toks, _st) in engine.results.items()}
+
+
+def run_differential(bundle, params, specs, *, engine_cls_pairs, **shared_kw):
+    """Run `specs` through each (name, cls, kw) engine config; returns
+    {name: (engine, results)} with a fresh VirtualClock per run."""
+    out = {}
+    for name, cls, kw in engine_cls_pairs:
+        eng = cls(bundle, params, clock=VirtualClock(), **shared_kw, **kw)
+        out[name] = (eng, run_trace(eng, specs))
+    return out
+
+
+def assert_same_results(ref: dict, got: dict, *, context: str = "") -> None:
+    """Bitwise token parity: same retired rids, identical token streams."""
+    assert sorted(ref) == sorted(got), (
+        f"{context}: retired sets differ: {sorted(ref)} vs {sorted(got)}")
+    for rid in ref:
+        np.testing.assert_array_equal(
+            np.asarray(ref[rid]), np.asarray(got[rid]),
+            err_msg=f"{context}: rid {rid} tokens diverge")
+
+
+def assert_pool_clean(engine) -> None:
+    """Page-pool invariants after a drained run: internal consistency, all
+    slot references released (only prefix-cache pins may remain), and after
+    clearing those, zero pages held — no leak, no double-free."""
+    engine.page_pool.check()
+    assert engine.slots.num_active == 0
+    assert not engine.table.any(), "retired slots left live table entries"
+    if engine.prefix is not None:
+        engine.prefix.clear()
+    engine.page_pool.check()
+    assert engine.page_pool.num_held == 0, (
+        f"{engine.page_pool.num_held} pages leaked after drain + clear")
+    assert engine.page_pool.num_free == engine.page_pool.num_pages - 1

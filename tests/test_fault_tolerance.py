@@ -19,10 +19,11 @@ import numpy as np
 import pytest
 
 from conftest import build_smoke as _bundle
+from serving_traces import make_trace, to_requests
 from repro.runtime import MetricsLogger
 from repro.serving import (AdmissionError, ContinuousEngine, FailureInjection,
-                           Request, ServingSupervisor, VirtualClock,
-                           load_snapshot, poisson_trace)
+                           PagedEngine, Request, ServingSupervisor,
+                           VirtualClock, load_snapshot, poisson_trace)
 from repro.serving.engine import summarize
 
 MAX_LEN = 64
@@ -91,6 +92,46 @@ def test_drain_timeout_evicts_in_flight_for_recompute(tmp_path):
         assert r.arrival_time == 0.0 and r.deadline is None
     merged = {**results,
               **_engine(bundle, params, temperature=0.7).run(pending)}
+    for rid, (tokens, _st) in baseline.items():
+        np.testing.assert_array_equal(merged[rid][0], tokens,
+                                      err_msg=f"rid {rid}")
+
+
+def test_paged_drain_snapshot_and_resume_is_bitwise(tmp_path):
+    """Drain a PREFIX-SHARED paged workload mid-run: the snapshot records the
+    paged engine's page accounting (`snapshot["engine"]`), eviction releases
+    every slot's pages (only prefix-cache pins survive), and a fresh paged
+    engine resuming the pending list reproduces the uninterrupted run's
+    tokens bitwise — prefix reuse on resume included."""
+    cfg, bundle, params = _bundle("olmo-1b")
+
+    def paged():
+        return PagedEngine(bundle, params, num_slots=2, max_len=MAX_LEN,
+                           chunk=4, page_size=8, cache_dtype=jnp.float32,
+                           temperature=0.7, clock=VirtualClock())
+
+    specs = make_trace(21, vocab_size=cfg.vocab_size, n_requests=8)
+    baseline = paged().run(to_requests(specs))
+
+    eng = paged()
+    sup = ServingSupervisor(eng, drain_dir=str(tmp_path), drain_timeout=0.0,
+                            inject=(FailureInjection.parse("preempt@2"),))
+    sup.serve(to_requests(specs))
+    assert sup.drained
+    snap = json.load(open(sup.snapshot_path))
+    assert snap["engine"]["kind"] == "paged"
+    assert snap["engine"]["page_size"] == 8
+    assert snap["engine"]["resume"] == "recompute_from_prompt"
+    # evicted slots released their pages; whatever is still in use is pinned
+    # by the prefix cache, not leaked by a dead slot
+    assert eng.slots.num_active == 0 and not eng.table.any()
+    assert snap["engine"]["pages_in_use"] == eng.page_pool.num_held
+    eng.prefix.clear()
+    assert eng.page_pool.num_held == 0
+
+    results, pending, _ = load_snapshot(sup.snapshot_path)
+    assert pending, "drain at chunk 2 should leave unfinished requests"
+    merged = {**results, **paged().run(pending)}
     for rid, (tokens, _st) in baseline.items():
         np.testing.assert_array_equal(merged[rid][0], tokens,
                                       err_msg=f"rid {rid}")

@@ -3,16 +3,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+from conftest import build_smoke
 
-from repro.configs import smoke_config
 from repro.launch.serve import generate_tokens
-from repro.models import build
 
 
 def test_generate_greedy_deterministic():
-    cfg = smoke_config("olmo-1b")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    cfg, bundle, params = build_smoke("olmo-1b")
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab_size)
     toks1, stats = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
     toks2, _ = generate_tokens(bundle, params, prompt, 8, cache_dtype=jnp.float32)
@@ -24,9 +21,7 @@ def test_generate_greedy_deterministic():
 def test_generate_matches_teacher_forced_argmax():
     """Greedy decode == argmax over the teacher-forced forward logits when the
     generated tokens are fed back (self-consistency of the cache path)."""
-    cfg = smoke_config("olmo-1b")
-    bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(0))
+    cfg, bundle, params = build_smoke("olmo-1b")
     prompt = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab_size)
     toks, _ = generate_tokens(bundle, params, prompt, 4, cache_dtype=jnp.float32)
     # teacher-forced re-check of the first generated token
