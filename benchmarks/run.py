@@ -34,7 +34,8 @@ def main(argv=None):
     argv = argv if argv is not None else sys.argv[1:]
 
     from benchmarks import t1_truncation, t2_methods, t8_remap, t15_t16_t17, t23_speed
-    from benchmarks import kernels_bench, t24_continuous, t25_artifact, t26_paged
+    from benchmarks import (kernels_bench, t24_continuous, t25_artifact,
+                            t26_paged, t27_speculative)
 
     smoke = "--smoke" in argv
     sections = [
@@ -46,6 +47,7 @@ def main(argv=None):
         ("t24_continuous", lambda: t24_continuous.main(smoke=smoke)),
         ("t25_artifact", lambda: t25_artifact.main(smoke=smoke)),
         ("t26_paged", lambda: t26_paged.main(smoke=smoke)),
+        ("t27_speculative", lambda: t27_speculative.main(smoke=smoke)),
         ("kernels", kernels_bench.main),
     ]
 

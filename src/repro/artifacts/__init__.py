@@ -5,7 +5,9 @@ reference + unified `CompressionReport` + factored/quantized leaves + trained
 soft-k's) with `save`/`load` built on the fault-tolerant checkpointer and
 `apply(params)` to produce servable params. `compress(...)` — re-exported at
 the top level as `repro.compress` — is the one-call facade over the whole
-calibrate/train → plan → update → remap pipeline. See docs/api.md.
+calibrate/train → plan → update → remap pipeline. `speculative_pair(...)`
+builds the draft/target param pair for self-speculative serving from ONE
+base pytree (artifacts/pairing.py). See docs/api.md.
 """
 
 from repro.artifacts.report import CompressionReport
@@ -24,6 +26,7 @@ __all__ = [
     "compress",
     "is_artifact_dir",
     "load_artifact",
+    "speculative_pair",
     "verify_artifact",
 ]
 
@@ -34,4 +37,7 @@ def __getattr__(name):
     if name == "compress":
         from repro.artifacts.facade import compress
         return compress
+    if name == "speculative_pair":
+        from repro.artifacts.pairing import speculative_pair
+        return speculative_pair
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

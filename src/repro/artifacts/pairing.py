@@ -1,0 +1,51 @@
+"""Draft/target pairing: load a base checkpoint ONCE, serve it twice.
+
+Self-speculative serving (serving/speculative.py) wants two parameter views
+of the same model: the dense (or mildly compressed) TARGET that defines the
+output distribution, and an aggressive-ratio DRAFT that proposes tokens
+cheaply. `rebuild_params` builds servable params as ``dict(params)`` and
+swaps only the eligible linears into factor dicts, so applying an artifact
+to a base pytree leaves every untouched leaf — embeddings, norms, lm head,
+and every non-eligible linear — SHARED BY REFERENCE with the base. Pairing
+therefore costs one base checkpoint plus the factor leaves, never two
+models.
+
+`speculative_pair` packages that invariant with the config cross-checks the
+serving stack relies on, and asserts the sharing actually happened (a
+regression in `rebuild_params` that deep-copied leaves would silently
+double memory; here it fails loudly).
+"""
+
+from __future__ import annotations
+
+
+def speculative_pair(config, base_params, draft, *, target=None, mesh=None):
+    """Build ``(target_params, draft_params)`` from one base pytree.
+
+    `draft` (and the optional `target`) are `CompressionArtifact`s built for
+    `config`; `target=None` means the dense base itself is the target — the
+    headline self-speculative setup, where speculation must reproduce plain
+    dense decode bitwise. With a `mesh`, both views are placed under the
+    serving param rules (`CompressionArtifact.apply(mesh=...)`), and the
+    reference-sharing assertion is skipped — `device_put` may or may not
+    alias already-placed leaves, that is the runtime's call.
+    """
+    for name, art in (("draft", draft), ("target", target)):
+        if art is None:
+            continue
+        if art.config != config:
+            raise ValueError(
+                f"{name} artifact was built for config "
+                f"{art.config.name!r} (d_model={art.config.d_model}), not "
+                f"{config.name!r} (d_model={config.d_model})")
+    target_params = (base_params if target is None
+                     else target.apply(base_params, mesh=mesh))
+    draft_params = draft.apply(base_params, mesh=mesh)
+    if mesh is None:
+        # the whole point of the pairing: base leaves are views, not copies
+        assert draft_params["embed"] is base_params["embed"], \
+            "draft params no longer share base leaves by reference"
+        if target is not None:
+            assert target_params["embed"] is base_params["embed"], \
+                "target params no longer share base leaves by reference"
+    return target_params, draft_params

@@ -145,7 +145,7 @@ def generate(*args, **kwargs):
     return generate_tokens(*args, **kwargs)
 
 
-def run_traffic(bundle, params, args, cfg, mesh=None):
+def run_traffic(bundle, params, args, cfg, mesh=None, draft_params=None):
     """Replay a Poisson arrival trace through the continuous-batching engine,
     supervised for graceful drain / failure injection (serving/supervisor.py).
 
@@ -165,8 +165,9 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
 
     from repro.runtime import MetricsLogger, PreemptionGuard
     from repro.serving import (ContinuousEngine, FailureInjection, PagedEngine,
-                               ServingSupervisor, VirtualClock, WallClock,
-                               load_snapshot, poisson_trace)
+                               ServingSupervisor, SpeculativeEngine,
+                               VirtualClock, WallClock, load_snapshot,
+                               poisson_trace)
 
     g = args.gen_len
     prior_results = {}
@@ -188,7 +189,15 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
                      cache_dtype=jnp.dtype(cfg.dtype),
                      temperature=args.temperature, clock=clock, mesh=mesh,
                      max_queue=args.max_queue)
-    if args.kv_cache == "paged":
+    if args.speculative:
+        # one round may over-write draft_k positions past a slot's cap, so
+        # the headroom uses the larger of chunk and draft_k
+        max_len = args.prompt_len + g + max(args.chunk, args.draft_k) + 8
+        engine_kw["max_len"] = max_len + (-max_len) % args.page_size
+        engine = SpeculativeEngine(bundle, params, draft_params,
+                                   draft_k=args.draft_k,
+                                   page_size=args.page_size, **engine_kw)
+    elif args.kv_cache == "paged":
         # pages round max_len up; tokens are unchanged (the engine masks by
         # true length) so paged vs slot stays an apples-to-apples comparison
         engine_kw["max_len"] = max_len + (-max_len) % args.page_size
@@ -228,6 +237,13 @@ def run_traffic(bundle, params, args, cfg, mesh=None):
               f"({pg['prefix_hits_full']} full / "
               f"{pg['prefix_hits_partial']} partial, "
               f"{pg['shared_pages']} pages shared)")
+    if "speculative" in agg:
+        sp = agg["speculative"]
+        print(f"[serve]   speculative: draft_k {sp['draft_k']}, "
+              f"acceptance {sp['acceptance_rate']:.2f} "
+              f"({sp['accepted']}/{sp['drafted']} drafts, "
+              f"{sp['rollbacks']} rollbacks, "
+              f"mean {sp['mean_accepted_len']:.2f} tok/round)")
     if sup.drained:
         print(f"[serve] drained: {len(results)} finished, "
               f"{len(sup.snapshot['pending'])} pending flushed"
@@ -296,6 +312,20 @@ def main(argv=None):
                          "are bitwise-identical either way")
     ap.add_argument("--page-size", type=int, default=16,
                     help="--kv-cache paged: tokens per KV page")
+    ap.add_argument("--speculative", action="store_true",
+                    help="--traffic: self-speculative decoding — an "
+                         "aggressive-ratio compression of THIS model drafts "
+                         "--draft-k tokens per round, one dense multi-token "
+                         "pass verifies them (docs/serving.md §Self-"
+                         "speculative decoding). Implies paged KV storage; "
+                         "output tokens are bitwise-identical to plain decode")
+    ap.add_argument("--draft-ratio", type=float, default=0.3,
+                    help="--speculative: compression ratio of the draft "
+                         "artifact (built in-process from the base params; "
+                         "base leaves are shared with the target by "
+                         "reference, never duplicated)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="--speculative: tokens drafted per round")
     ap.add_argument("--max-queue", type=int, default=None, metavar="N",
                     help="--traffic admission control: max requests waiting "
                          "for a slot; arrivals beyond it are rejected with "
@@ -347,6 +377,14 @@ def main(argv=None):
                  "--ratio/--method/--save-artifact cannot be combined with it")
     if (args.verify_artifact or args.allow_degraded) and args.artifact is None:
         ap.error("--verify-artifact/--allow-degraded only apply to --artifact")
+    if args.speculative:
+        if args.traffic <= 0 and not args.resume:
+            ap.error("--speculative rides the continuous-batching engine; "
+                     "pass --traffic N (or --resume DIR)")
+        if not 0.0 < args.draft_ratio < 1.0:
+            ap.error("--draft-ratio must be in (0, 1)")
+        if args.draft_k < 1:
+            ap.error("--draft-k must be >= 1")
 
     def base_params(bundle):
         """The base (uncompressed) pytree the compressed leaves merge into."""
@@ -405,7 +443,8 @@ def main(argv=None):
             if cfg != art.config:
                 ap.error("--set cannot override an artifact's model config")
         bundle = build(cfg)
-        params = bundle.with_artifact(art, base_params(bundle), mesh=mesh)
+        base = base_params(bundle)
+        params = bundle.with_artifact(art, base, mesh=mesh)
         print(f"[serve] artifact {args.artifact}: {art.report.summary()}")
         if args.base_params is None:
             print("[serve]   base (uncompressed) leaves from init(PRNGKey(0)) "
@@ -415,7 +454,8 @@ def main(argv=None):
         if args.set:
             cfg = parse_overrides(cfg, args.set)
         bundle = build(cfg)
-        params = base_params(bundle)
+        base = base_params(bundle)
+        params = base
 
         if args.ratio > 0:
             calib = [jax.random.randint(jax.random.PRNGKey(i), (2, args.prompt_len),
@@ -430,8 +470,24 @@ def main(argv=None):
                 print(f"[serve] artifact saved to {args.save_artifact} "
                       f"({art.nbytes()/2**20:.2f} MiB of factors)")
 
+    draft_params = None
+    if args.speculative:
+        # draft from the SAME base pytree the target serves — base leaves are
+        # shared by reference, only the factored linears are new memory
+        calib = [jax.random.randint(jax.random.PRNGKey(i),
+                                    (2, args.prompt_len), 0, cfg.vocab_size)
+                 for i in range(2)]
+        draft_art = artifacts.compress(cfg, base, ratio=args.draft_ratio,
+                                       method=args.method or "dobi_noremap",
+                                       calib=calib)
+        _, draft_params = artifacts.speculative_pair(cfg, base, draft_art,
+                                                     mesh=mesh)
+        print(f"[serve] speculative draft: {draft_art.report.summary()} "
+              f"(draft_k={args.draft_k})")
+
     if args.traffic > 0 or args.resume:
-        return run_traffic(bundle, params, args, cfg, mesh=mesh)
+        return run_traffic(bundle, params, args, cfg, mesh=mesh,
+                           draft_params=draft_params)
 
     prompt = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len),
                                 0, cfg.vocab_size)

@@ -43,6 +43,12 @@ class ModelBundle:
     # paged KV storage (serving/paged.py):
     # (params, batch, max_len, *, page_size, num_pages, dtype) -> cache
     init_paged_cache: Callable | None = None
+    # speculative verify: (params, tokens (B,S), cache, lengths (B,)) ->
+    # (logits (B,S,V), cache) — one multi-token pass over a paged cache that
+    # scores every candidate position (serving/speculative.py). None for
+    # families without it; raises NotImplementedError when traced on a
+    # template whose state cannot hold a span (rings, mamba).
+    verify_step: Callable | None = None
 
     # ---- fused generation -------------------------------------------------
     def generate(self, params, batch, gen_len: int, *, eos_id: int | None = None,
@@ -244,12 +250,16 @@ def _lm_bundle(cfg: ModelConfig) -> ModelBundle:
                                     page_size=page_size, num_pages=num_pages,
                                     dtype=dtype)
 
+    def verify(params, tokens, cache, lengths):
+        return tfm.verify_step(params, tokens, cfg, cache, lengths)
+
     return ModelBundle(
         cfg=cfg,
         init=functools.partial(_init_lm, cfg),
         loss=loss, forward=fwd, prefill=prefill, decode_step=decode,
         init_cache=init_cache,
         prefill_len=prefill_len, init_paged_cache=init_paged_cache,
+        verify_step=verify,
     )
 
 

@@ -38,11 +38,21 @@ import numpy as np
 
 def select_token(logits, key, temperature, do_sample: bool) -> jnp.ndarray:
     """Greedy argmax, or temperature sampling when `do_sample` (static).
-    `key` may be None in greedy mode (eager callers skip the fold-in)."""
-    if do_sample:
-        scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
-        return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
-    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    `key` may be None in greedy mode (eager callers skip the fold-in).
+
+    `do_sample=True` with `temperature <= 0` falls back to greedy argmax
+    explicitly: temperature is a traced value here, so the guard is a
+    `jnp.where` select, not an error. (Dividing by the old `1e-6` clamp
+    instead produced a silently near-greedy categorical — close to argmax
+    but not bitwise argmax, which broke every tokens-identical contract.)
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if not do_sample:
+        return greedy
+    temperature = jnp.asarray(temperature, jnp.float32)
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
 
 
 def freeze_finished(tok, alive, eos_id):
@@ -105,13 +115,20 @@ def select_token_per_slot(logits, rng, seeds, positions, temperature,
     `(request seed, absolute position)` into the base key, so a request's
     sampled tokens do not depend on which other requests share the batch or
     when it was admitted.
+
+    Same explicit greedy fallback as `select_token`: `do_sample=True` with a
+    (traced) `temperature <= 0` selects the argmax instead of sampling a
+    near-greedy categorical from the `1e-6`-clamped division.
     """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     if not do_sample:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+    temperature = jnp.asarray(temperature, jnp.float32)
     scaled = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
     keys = jax.vmap(lambda sd, p: jax.random.fold_in(jax.random.fold_in(rng, sd), p))(
         seeds, positions)
-    return jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(keys, scaled).astype(jnp.int32)
+    sampled = jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
 
 
 def make_chunk_loop(decode_step, eos_id: int | None, chunk: int):

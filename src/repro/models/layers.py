@@ -280,6 +280,43 @@ def decode_attention(
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def span_decode_attention(
+    q: jnp.ndarray,           # (B, S, H, D) — S new positions per row
+    k_cache: jnp.ndarray,     # (B, Skv, KVH, D)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,     # (B,) — row i's query j sits at lengths[i] + j
+) -> jnp.ndarray:
+    """Multi-token decode attention: S queries per row against one KV cache.
+
+    The speculative verify pass scores k+1 candidate positions in a single
+    forward; query j of row i lives at absolute position ``lengths[i] + j``
+    and may attend to cache entries ``< lengths[i] + j + 1`` (itself
+    included — its K/V were just written). Same GQA contraction as
+    `decode_attention` (cache read once, native dtype, no G× repeat), with
+    the validity mask made per-query instead of per-row.
+
+    Full-attention caches only — sliding-window callers keep the
+    single-token path (the ring layout is position-recurrent and cannot
+    express a span).
+    """
+    b, s, kvh, d = k_cache.shape
+    sq, h = q.shape[1], q.shape[2]
+    groups = h // kvh
+    scale = 1.0 / math.sqrt(d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, groups, d)
+    # scores: (B, KVH, G, Sq, S)
+    sc = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s)
+    qend = lengths.reshape(-1, 1, 1, 1, 1) + (jnp.arange(sq) + 1).reshape(1, 1, 1, -1, 1)
+    valid = kpos[None, None, None, None, :] < qend
+    sc = jnp.where(valid, sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Gated MLP
 # ---------------------------------------------------------------------------

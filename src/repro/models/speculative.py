@@ -1,0 +1,118 @@
+"""Self-speculative decoding round: draft with low-rank factors, verify
+densely, accept the longest matching prefix — one compiled program.
+
+The Dobi-SVD angle: an aggressive-ratio `CompressionArtifact` shares every
+base leaf (embeddings, norms, lm head) with the dense target by construction
+(`rebuild_params` swaps only eligible linears into factor dicts), so the
+"draft model" is the same pytree with cheaper matmuls — no second model is
+loaded or held. One round, as a single dispatch:
+
+  1. **Draft** — a `lax.scan` of ``k+1`` single-token `decode_step` calls on
+     the DRAFT params against the draft's own paged KV cache, proposing
+     d_1..d_k. The extra (k+1)-th step exists only for its KV write: when all
+     k drafts are accepted the draft cache must already hold d_k's K/V at
+     position L+k, or the next round's draft would attend a hole; its emitted
+     token is discarded.
+  2. **Verify** — ONE multi-token `verify_step` pass on the TARGET params
+     over [tok, d_1..d_k] (k+1 positions), returning per-position logits.
+     This is the whole point: a sequential re-check would cost exactly plain
+     decode; the batched span pass amortizes the target's weights over k+1
+     positions.
+  3. **Accept** — position j's target token is drawn with the same
+     `(seed, position)`-folded key the plain chunked loop uses, so it IS the
+     token plain decode would emit there (greedy or derandomized sampling —
+     matching the target's own sampled token is the rejection-sampling
+     acceptance rule under per-position keys). The first m matching drafts
+     plus the bonus/correction token are emitted: ``n_acc = m+1`` tokens,
+     clipped at the first EOS.
+
+Rollback is free: rejected positions' K/V stay in both caches but every
+attention read masks positions ``>= length`` and the next round's writes land
+on exactly those positions before any read unmasks them (write-before-gather
+in span/decode attention) — so "rolling back" is nothing but not advancing
+`lengths` past the accepted frontier. Page RELEASE on early retirement is the
+engine's job (serving/paged.py:rollback_slot).
+
+Output-parity argument (the tests/serving_traces.py contract): emitted
+tokens are always a prefix of `tgt`, and `tgt[j]` is computed from logits
+conditioned only on tokens the target itself emitted at positions < L+1+j
+(accepted drafts equal the target tokens by construction), so the emitted
+stream is bitwise the plain-decode stream regardless of draft quality —
+drafts only decide how many positions each round advances.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.generate import select_token_per_slot
+
+
+def make_speculative_round(decode_step, verify_step, eos_id: int | None,
+                           draft_k: int):
+    """Build the fused draft→verify→accept round body.
+
+    `decode_step`/`verify_step` are bundle-style callables
+    ``(params, token(s), cache, length(s)) -> (logits, cache)``; `draft_k`
+    is the number of drafted tokens per round (static — it sizes the scan).
+
+    Returned signature (callers jit with both caches donated):
+        round(params, draft_params, tok, cache, draft_cache, lengths, alive,
+              seeds, rng, temperature, *, do_sample=False)
+          -> (cand (B, k+1), n_acc (B,), tok' (B,), cache, draft_cache,
+              lengths' (B,), alive' (B,))
+
+    Row b emits ``cand[b, :n_acc[b]]`` this round (host-side accept);
+    `tok'` is the last emitted token (position ``lengths'``, not yet written
+    to either cache — the same carry invariant as the plain chunk loop).
+    Dead slots run through both models with frozen EOS candidates, exactly
+    like the plain loop's frozen tail.
+    """
+    k = draft_k
+
+    def round_fn(params, draft_params, tok, cache, draft_cache, lengths, alive,
+              seeds, rng, temperature, *, do_sample: bool = False):
+        lengths = jnp.asarray(lengths, jnp.int32)
+
+        # -- draft: k+1 cheap steps on the factored params ------------------
+        def draft_body(carry, j):
+            cur, dcache = carry
+            logits, dcache = decode_step(draft_params, cur, dcache, lengths + j)
+            nxt = select_token_per_slot(logits, rng, seeds, lengths + 1 + j,
+                                        temperature, do_sample)
+            return (nxt, dcache), nxt
+
+        (_, draft_cache), drafted = jax.lax.scan(
+            draft_body, (tok, draft_cache), jnp.arange(k + 1, dtype=jnp.int32))
+        drafts = drafted.T[:, :k]                       # (B, k): d_1..d_k
+
+        # -- verify: one span pass on the dense params ----------------------
+        span = jnp.concatenate([tok[:, None], drafts], axis=1)   # (B, k+1)
+        logits, cache = verify_step(params, span, cache, lengths)
+        tgt = jnp.stack(
+            [select_token_per_slot(logits[:, j], rng, seeds, lengths + 1 + j,
+                                   temperature, do_sample)
+             for j in range(k + 1)], axis=1)            # (B, k+1)
+
+        # -- accept the longest matching prefix + the bonus token -----------
+        match = drafts == tgt[:, :k]                    # (B, k)
+        m = jnp.where(match.all(axis=1), k,
+                      jnp.argmin(match.astype(jnp.int32), axis=1))
+        n_acc = m + 1                                   # accepted drafts + bonus
+        cand = tgt
+        alive_out = alive
+        if eos_id is not None:
+            is_eos = tgt == eos_id
+            first_eos = jnp.where(is_eos.any(axis=1),
+                                  jnp.argmax(is_eos, axis=1), k + 1)
+            n_acc = jnp.minimum(n_acc, first_eos + 1)
+            cand = jnp.where(alive[:, None], cand, jnp.full_like(cand, eos_id))
+            alive_out = alive & ~(first_eos < n_acc)
+            n_acc = jnp.where(alive, n_acc, 1)          # frozen tail: 1 EOS/round
+
+        tok_out = jnp.take_along_axis(cand, (n_acc - 1)[:, None], axis=1)[:, 0]
+        return (cand, n_acc, tok_out, cache, draft_cache,
+                lengths + n_acc, alive_out)
+
+    return round_fn

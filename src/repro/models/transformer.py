@@ -229,6 +229,28 @@ def paged_write_slot(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
     return stacked.at[tuple(idx) + (page, off)].set(upd)
 
 
+def paged_write_span(stacked: jnp.ndarray, update: jnp.ndarray, idx: tuple,
+                     table: jnp.ndarray, lengths: jnp.ndarray,
+                     page_size: int) -> jnp.ndarray:
+    """Span variant of `paged_write_slot`: scatter a (B, S, KVH, Dh) update
+    into a paged pool leaf — row b's token j lands at absolute position
+    lengths[b] + j, i.e. physical page table[b, (lengths[b]+j) // page_size]
+    at offset (lengths[b]+j) % page_size. The speculative verify pass writes
+    all k+1 candidate positions in one scatter.
+
+    Same dead-slot story as the single-token write: retired slots' table rows
+    are the null page and the logical index is clipped, so their writes land
+    in page 0, which attention only ever sees with exactly-zero weight.
+    """
+    b, s = update.shape[:2]
+    upd = update.astype(stacked.dtype)
+    pos = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]   # (B, S)
+    logical = jnp.clip(pos // page_size, 0, table.shape[1] - 1)
+    page = jnp.take_along_axis(table, logical, axis=1)                 # (B, S)
+    off = pos % page_size
+    return stacked.at[tuple(idx) + (page, off)].set(upd)
+
+
 def paged_read(stacked: jnp.ndarray, idx: tuple, table: jnp.ndarray) -> jnp.ndarray:
     """Gather a slot-contiguous (B, max_len, KVH, Dh) view of layer `idx` of
     a paged pool leaf through the page table (B, pages_per_slot). Pure data
@@ -298,6 +320,35 @@ def decode_attention_layer(
 def ring_valid_count(length, s_cache: int):
     """Number of valid slots in a ring cache after writing position `length`."""
     return jnp.minimum(jnp.asarray(length) + 1, s_cache)
+
+
+def span_attention_layer(
+    p, x, cfg: ModelConfig, cache: KVCache, lengths: jnp.ndarray, *,
+    idx: tuple = (), pages: jnp.ndarray,
+) -> tuple[jnp.ndarray, KVCache]:
+    """Multi-token decode attention for the speculative verify pass.
+
+    x: (B, S, D) — S candidate tokens per row, row b's token j at absolute
+    position lengths[b] + j. All S positions' K/V are scattered into the
+    paged pool in one write (`paged_write_span`), then every query attends
+    the gathered slot view under a per-query causal mask
+    (`layers.span_decode_attention`) — query j sees positions < lengths+j+1,
+    exactly what j successive single-token decode steps would see.
+
+    Paged full-attention layers only: sliding-window rings are
+    position-recurrent (slot i%window holds whatever was written last) and
+    cannot represent a multi-position in-flight span.
+    """
+    b, s, _ = x.shape
+    positions = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    page_size = cache.k.shape[len(idx) + 1]   # (*stack, P, ps, KVH, Dh)
+    new_k = paged_write_span(cache.k, k, idx, pages, lengths, page_size)
+    new_v = paged_write_span(cache.v, v, idx, pages, lengths, page_size)
+    layer_k = paged_read(new_k, idx, pages)
+    layer_v = paged_read(new_v, idx, pages)
+    out = L.span_decode_attention(q, layer_k, layer_v, lengths)
+    return L.apply_linear(p["wo"], out.reshape(b, s, -1)), KVCache(new_k, new_v)
 
 
 # ---------------------------------------------------------------------------
@@ -425,6 +476,29 @@ def decode_block(p, x, cfg, kind, cache, length, *, window: int,
             p["moe"], y.reshape(b * s, d), top_k=cfg.num_experts_per_tok,
             capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
             min_capacity=b * s,   # dropless at decode (T = batch, tiny)
+        )
+        out = out.reshape(b, s, d)
+    else:
+        out = L.apply_mlp(p["mlp"], y, cfg.act)
+    return x + out, new_cache
+
+
+def verify_block(p, x, cfg, kind, cache, lengths, *, idx: tuple = (), pages):
+    """Multi-token decode block (speculative verify). x: (B, S, D) at
+    per-row positions lengths + [0..S); paged full-attention layers only
+    (see span_attention_layer). The MLP/MoE half is shape-generic."""
+    h, new_cache = span_attention_layer(
+        p["attn"], _norm(cfg, p["ln1"], x), cfg, cache, lengths,
+        idx=idx, pages=pages,
+    )
+    x = x + h
+    y = _norm(cfg, p["ln2"], x)
+    if kind == "moe":
+        b, s, d = y.shape
+        out, _ = moe_lib.apply_moe(
+            p["moe"], y.reshape(b * s, d), top_k=cfg.num_experts_per_tok,
+            capacity_factor=cfg.moe_capacity_factor, act=cfg.act,
+            min_capacity=b * s,
         )
         out = out.reshape(b, s, d)
     else:
@@ -971,6 +1045,64 @@ def decode_step(
     # over "model") so the sharded chunk loop's argmax/sample partitions
     # instead of gathering the vocab dim every step
     return constrain_logits(logits[:, 0]), new_cache
+
+
+def verify_step(
+    params: dict,
+    tokens: jnp.ndarray,       # (B, S) int32 — candidate span per slot
+    cfg: ModelConfig,
+    cache: dict,
+    lengths,                   # (B,) int32 — row b's token j is at lengths[b]+j
+) -> tuple[jnp.ndarray, dict]:
+    """Multi-token decode: score S candidate tokens per row in ONE forward
+    pass, returning per-position logits (B, S, V) and the updated cache.
+
+    This is the speculative-decoding verify primitive (serving/speculative.py):
+    the target model checks k drafted tokens + samples one bonus token from a
+    single batched pass instead of k+1 sequential `decode_step` calls —
+    position j's logits are bitwise what decode_step would produce after
+    feeding the first j candidates, because the span write happens before the
+    gather and the per-query mask admits exactly positions < lengths+j+1.
+
+    Only the uniform all-paged template qualifies: sliding-window rings and
+    mamba recurrent state are position-recurrent — they cannot hold k
+    in-flight positions, let alone roll back. Callers gate on the cache
+    structure (every KV leaf pooled) before tracing this.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    plan = plan_structure(cfg)
+    pages = cache.get(PAGE_TABLE_KEY)
+    if pages is None:
+        raise ValueError("verify_step requires a paged cache (init_paged_cache)")
+    if plan["template"] != "uniform" or plan["kind"] == "mamba" \
+            or cfg.sliding_window > 0:
+        raise NotImplementedError(
+            f"verify_step supports the uniform all-paged template only, got "
+            f"template={plan['template']!r} window={cfg.sliding_window} — "
+            f"ring/mamba state cannot hold a multi-position span")
+
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = constrain_batch(x * math.sqrt(cfg.d_model))
+    kind = plan["kind"]
+
+    def body(carry, xs):
+        h, kv = carry
+        blk, i = xs
+        h2, kv = verify_block(blk, h, cfg, kind, kv, lengths, idx=(i,), pages=pages)
+        return (h2, kv), None
+
+    (x, new_blocks), _ = scan_or_loop(
+        body, (x, cache["blocks"]),
+        (params["blocks"], jnp.arange(plan["layers"])), cfg.scan_layers)
+    new_cache = {"blocks": new_blocks, PAGE_TABLE_KEY: pages}
+
+    x = L.rmsnorm(params["final_norm"], x)
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    else:
+        logits = L.apply_linear(head, x)
+    return constrain_logits(logits), new_cache
 
 
 # ---------------------------------------------------------------------------

@@ -16,10 +16,17 @@ enforces — docs/serving.md §Failure handling.
 with hash-based prefix sharing and bucketed prefill — bitwise-identical
 tokens at a fraction of the KV memory and prefill dispatches
 (docs/serving.md §Paged KV cache).
+
+`SpeculativeEngine` (speculative.py) serves the base model with itself as
+the draft: an aggressive-ratio compression artifact proposes `draft_k`
+tokens per round, one dense multi-token pass verifies them, and the longest
+matching prefix is accepted — plain-decode-bitwise output at higher decode
+throughput (docs/serving.md §Self-speculative decoding).
 """
 
 from repro.serving.engine import ContinuousEngine
 from repro.serving.paged import PagedEngine
+from repro.serving.speculative import SpeculativeEngine
 from repro.serving.pages import PagePool, PoolExhausted, PrefixCache
 from repro.serving.request import (AdmissionError, Request, RequestQueue,
                                    RequestStats)
@@ -41,6 +48,7 @@ __all__ = [
     "RequestStats",
     "ServingSupervisor",
     "SlotManager",
+    "SpeculativeEngine",
     "VirtualClock",
     "WallClock",
     "load_snapshot",

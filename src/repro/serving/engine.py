@@ -119,6 +119,12 @@ class ContinuousEngine:
         self.num_slots = num_slots
         self.max_len = max_len
         self.chunk = chunk
+        # worst-case positions a slot may be over-written past its cap while
+        # it waits to retire at the next boundary — `chunk` here; the
+        # speculative engine raises it to max(chunk, draft_k) since one round
+        # can write k+1 positions past the frontier. Sizes the submit guard
+        # and the paged engine's per-request page budget.
+        self._slack = chunk
         self.eos_id = eos_id
         self.cache_dtype = cache_dtype
         self.temperature = float(temperature)
@@ -308,11 +314,11 @@ class ContinuousEngine:
         if self.draining:
             raise self._reject(request, "draining")
         start = self.gen.start_length(len(request.prompt))
-        if start + request.max_new_tokens + self.chunk > self.max_len:
+        if start + request.max_new_tokens + self._slack > self.max_len:
             raise self._reject(
                 request, "oversized",
                 f"prompt {len(request.prompt)} + max_new_tokens "
-                f"{request.max_new_tokens} + chunk slack {self.chunk} "
+                f"{request.max_new_tokens} + decode slack {self._slack} "
                 f"exceeds max_len {self.max_len}")
         self.queue.push(request)
 

@@ -294,11 +294,40 @@ class PagedEngine(ContinuousEngine):
         self.table[slot, :] = 0       # dead-slot decode writes → null page
         self._table_dirty = True
 
+    def rollback_slot(self, slot: int, length: int) -> int:
+        """Truncate a slot's page chain to `length` valid tokens: keep the
+        pages holding positions < length PLUS the page position `length`
+        itself lands in (decode resumes by writing there — releasing it
+        would force a re-alloc before the very next token), release the
+        rest, and null their table entries. Returns the number of pages
+        released.
+
+        This is the speculative-decoding rollback primitive: rejected
+        positions' K/V need no erasing (attention masks positions >= length
+        and the next round's writes land before any read unmasks them), so
+        rolling back a slot is page-pointer bookkeeping only. It is also the
+        general early-truncation hook — a slot retiring far below its
+        reserved budget can hand its unused tail back to the pool.
+        """
+        npp = self.max_len // self.page_size
+        keep = min(length // self.page_size + 1, npp)
+        released = 0
+        for j in range(keep, npp):
+            pg = int(self.table[slot, j])
+            if pg:
+                self.page_pool.release(pg)
+                self.table[slot, j] = 0
+                released += 1
+        if released:
+            self._table_dirty = True
+        return released
+
     def _pages_needed(self, start: int, request: Request) -> int:
-        # the +chunk slack mirrors submit()'s size guard: a slot that hits
-        # EOS or max_new mid-chunk keeps writing until the boundary, and
-        # every such write must land in a page this slot owns
-        return -(-(start + request.max_new_tokens + self.chunk)
+        # the +_slack mirrors submit()'s size guard: a slot that hits EOS or
+        # max_new mid-chunk (or mid-speculative-round) keeps writing until
+        # the boundary, and every such write must land in a page this slot
+        # owns — never clipped into another slot's last page
+        return -(-(start + request.max_new_tokens + self._slack)
                  // self.page_size)
 
     def _bucket(self, prompt_len: int) -> int:

@@ -1,0 +1,287 @@
+"""Self-speculative serving engine: the compression artifact drafts for its
+own base model.
+
+`SpeculativeEngine` replaces the chunked decode dispatch of `PagedEngine`
+with speculative ROUNDS (models/speculative.py): per dispatch, every slot
+drafts `draft_k` tokens with the low-rank DRAFT params (an aggressive-ratio
+`CompressionArtifact` applied to the same base pytree — embeddings, norms
+and lm head are shared by reference, so no second model is resident), then
+the dense TARGET params verify all k+1 positions in one multi-token span
+pass, and the longest matching prefix plus one bonus token is accepted.
+
+Output tokens are bitwise what plain (non-speculative) decode of the target
+would emit — greedy or derandomized-sampled — because acceptance compares
+against the target's own per-position `(seed, position)`-keyed tokens
+(models/speculative.py has the full argument; tests/test_speculative.py
+pins it on the differential trace harness). Speculation changes throughput
+only: when the draft agrees often, each round advances several positions
+for ~(draft cost × (k+1) + one dense span pass) instead of k+1 dense
+dispatches.
+
+Storage: TWO paged pools (target + draft KV) driven by ONE page table and
+ONE host-side `PagePool` — a slot's page chain addresses the same physical
+page indices in both pools, so admit/retire/rollback bookkeeping stays
+single-sourced and `rollback_slot`/`_release_slot_pages` need no changes.
+Rejected positions roll back by simply not advancing `lengths` (see
+models/speculative.py); page RELEASE happens at retirement exactly as in
+the base paged engine.
+
+Constraints:
+  * all-paged templates only (uniform full-attention, e.g. olmo-1b):
+    sliding-window rings and mamba recurrent state are position-recurrent
+    and cannot hold — let alone roll back — k in-flight positions.
+  * prefix sharing is off: shared pages would need to be resident in BOTH
+    pools with one refcount, and the draft's K/V for a prompt differ from
+    the target's — pairing the caches is future work, documented in
+    docs/serving.md §Self-speculative decoding.
+  * admission runs TWO prefill dispatches (target + draft) — the draft
+    cache needs the draft model's K/V for the prompt. Bucketed like the
+    base engine, so it stays a handful of executables.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.generate import _mesh_scope
+from repro.models.speculative import make_speculative_round
+from repro.models.transformer import PAGE_TABLE_KEY
+from repro.parallel import sharding as shardlib
+from repro.serving.paged import PagedEngine
+from repro.serving.request import Request
+
+
+class SpeculativeEngine(PagedEngine):
+    """PagedEngine whose decode dispatch is a speculative round (module
+    docstring). Extra arguments on top of `PagedEngine`:
+
+      draft_params — servable params of the draft model, sharing base leaves
+                     with `params` (artifacts.speculative_pair builds the
+                     pair from one base pytree + artifact(s)).
+      draft_k      — tokens drafted per round (static; sizes the fused scan
+                     and the per-slot over-write slack).
+
+    `chunk` loses its decode meaning here (a round advances 1..draft_k+1
+    tokens per slot) but keeps sizing nothing — the slack guard uses
+    ``max(chunk, draft_k)``. Zero-recompile contract unchanged: one round
+    executable for the engine's lifetime, admission only rewrites values.
+    """
+
+    def __init__(self, bundle, params, draft_params, *, draft_k: int = 4,
+                 **kw):
+        if draft_k < 1:
+            raise ValueError("draft_k must be >= 1")
+        if kw.get("prefix_sharing"):
+            raise ValueError(
+                "prefix sharing is not supported with speculation: shared "
+                "pages would need to be resident in both pools, and the "
+                "draft's prompt K/V differ from the target's")
+        kw["prefix_sharing"] = False
+        self.draft_k = draft_k
+        self.draft_params = draft_params
+        self._draft_scratch = None
+        self._draft_param_sharding = None
+        self.spec_rounds = 0        # round dispatches
+        self.spec_slot_rounds = 0   # (active slot, round) pairs
+        self.spec_drafted = 0       # draft tokens proposed (active slots)
+        self.spec_accepted = 0      # draft tokens accepted (bonus excluded)
+        self.spec_rollbacks = 0     # slot-rounds with >= 1 rejected draft
+        super().__init__(bundle, params, **kw)
+        # one speculative round may write up to draft_k positions past the
+        # accepted frontier; the submit guard and the per-request page
+        # budget must cover the larger of that and the chunk slack
+        self._slack = max(self.chunk, draft_k)
+
+    # ---- compiled callables -------------------------------------------------
+    def _build_fns(self, num_slots: int) -> None:
+        if any(ax != -1 for ax in jax.tree_util.tree_leaves(self._axes)):
+            raise NotImplementedError(
+                f"speculative decoding requires an all-paged full-attention "
+                f"KV cache; template {self.bundle.cfg.name!r} carries "
+                f"ring/mamba per-slot state, which cannot hold or roll back "
+                f"a multi-position span")
+        super()._build_fns(num_slots)
+        round_raw = make_speculative_round(
+            self.bundle.decode_step, self.bundle.verify_step, self.eos_id,
+            self.draft_k)
+        if self.mesh is None:
+            self._round_fn = jax.jit(round_raw, donate_argnums=(3, 4),
+                                     static_argnames=("do_sample",))
+            self._draft_prefill_len = jax.jit(self.bundle.prefill_len,
+                                              donate_argnums=(3,))
+            self._draft_prefill = jax.jit(self.bundle.prefill,
+                                          donate_argnums=(2,))
+            return
+        # mesh: the draft params' pytree STRUCTURE differs from the target's
+        # (factored {"w1","w2"} dicts), so they get their own sharding tree
+        # and their own pinned executables — same rules, prune_specs already
+        # understands factored leaves
+        mesh = self.mesh
+        self._draft_param_sharding = shardlib.make_sharding(
+            mesh, shardlib.prune_specs(
+                shardlib.param_specs(self.draft_params, fsdp=False),
+                self.draft_params, mesh))
+        self.draft_params = jax.device_put(self.draft_params,
+                                           self._draft_param_sharding)
+        rep = self._vec_sharding
+        pool_sh = self._pool_sharding
+        self._draft_prefill_len = jax.jit(
+            _mesh_scope(self.bundle.prefill_len, mesh), donate_argnums=(3,),
+            in_shardings=(self._draft_param_sharding, rep, rep,
+                          self._one_sharding),
+            out_shardings=(rep, self._one_sharding))
+        self._draft_prefill = jax.jit(
+            _mesh_scope(self.bundle.prefill, mesh), donate_argnums=(2,),
+            in_shardings=(self._draft_param_sharding, rep, self._one_sharding),
+            out_shardings=(rep, self._one_sharding))
+        do_sample = self.do_sample   # pjit rejects kwargs with in_shardings
+
+        def round_call(params, draft_params, tok, cache, draft_cache,
+                       lengths, alive, seeds, rng, temp):
+            return round_raw(params, draft_params, tok, cache, draft_cache,
+                             lengths, alive, seeds, rng, temp,
+                             do_sample=do_sample)
+
+        self._round_fn = jax.jit(
+            _mesh_scope(round_call, mesh), donate_argnums=(3, 4),
+            in_shardings=(self._param_sharding, self._draft_param_sharding,
+                          rep, pool_sh, pool_sh, rep, rep, rep, rep, rep),
+            out_shardings=(rep, rep, rep, pool_sh, pool_sh, rep, rep))
+
+    def _alloc_pool(self):
+        pool = super()._alloc_pool()
+        # the draft pool mirrors the target pool byte-for-byte in layout —
+        # same pages, same table, same pinned sharding — only its K/V come
+        # from the draft model's projections
+        self.draft_pool = self.bundle.init_paged_cache(
+            self.params, self.num_slots, self.max_len,
+            page_size=self.page_size, num_pages=self.num_pages,
+            dtype=self.cache_dtype)
+        if self.mesh is not None:
+            self.draft_pool = jax.device_put(self.draft_pool,
+                                             self._pool_sharding)
+        self._draft_scratch = None
+        return pool
+
+    def _ensure_draft_scratch(self) -> None:
+        if self._draft_scratch is None:
+            self._draft_scratch = self.bundle.init_cache(
+                self.params, 1, max_len=self.max_len,
+                dtype=self.cache_dtype)
+            if self.mesh is not None:
+                self._draft_scratch = shardlib.place_cache(
+                    self.mesh, self._draft_scratch, self.bundle.cfg)
+
+    # ---- admission: mirror the prefill into the draft pool ------------------
+    def _finish_admit(self, request: Request, slot, stats, logits, start,
+                      t0) -> None:
+        # the target-side table row is already written; replay the prompt
+        # through the DRAFT params and scatter into the same pages of the
+        # draft pool. The first token still comes from the TARGET's prefill
+        # logits (plain-decode parity from token zero).
+        self._mirror_draft_prefill(request, slot)
+        super()._finish_admit(request, slot, stats, logits, start, t0)
+
+    def _mirror_draft_prefill(self, request: Request, slot: int) -> None:
+        prompt = [int(t) for t in np.asarray(request.prompt).reshape(-1)]
+        npp = self.max_len // self.page_size
+        self._ensure_draft_scratch()
+        if self._pad_prefill:
+            bucket = self._bucket(len(prompt))
+            padded = np.zeros(bucket, np.int32)
+            padded[:len(prompt)] = prompt
+            _, dcache1 = self._draft_prefill_len(
+                self.draft_params, {"tokens": jnp.asarray(padded)[None]},
+                jnp.asarray(len(prompt), jnp.int32), self._draft_scratch)
+        else:
+            _, dcache1 = self._draft_prefill(
+                self.draft_params,
+                {"tokens": jnp.asarray(prompt, dtype=jnp.int32)[None]},
+                self._draft_scratch)
+        # no prefix sharing ⇒ every page in this slot's row is owned; write
+        # them all, drop the unused tail via the out-of-range sentinel
+        dst = np.full(npp, self.num_pages, np.int32)
+        row = self.table[slot]
+        held = row != 0
+        dst[:int(held.sum())] = row[held]
+        self.draft_pool = self._insert(self.draft_pool, dcache1, slot,
+                                       jnp.asarray(dst))
+        self._draft_scratch = dcache1
+
+    # ---- decode: one speculative round per dispatch -------------------------
+    def _step_chunk(self) -> None:
+        if self._table_dirty:
+            # two separate device arrays: both pools are DONATED to the round
+            # and a shared table buffer would be donated twice
+            for attr in ("pool", "draft_pool"):
+                table = jnp.asarray(self.table)
+                if self.mesh is not None:
+                    table = jax.device_put(
+                        table, self._pool_sharding[PAGE_TABLE_KEY])
+                setattr(self, attr,
+                        {**getattr(self, attr), PAGE_TABLE_KEY: table})
+            self._table_dirty = False
+        s = self.slots
+        t0 = time.perf_counter()
+        tok_d, len_d, alive_d, seeds_d = s.device_state(self._vec_sharding)
+        temp = jnp.asarray(self.temperature, jnp.float32)
+        if self.mesh is None:
+            (cand, n_acc, tok, self.pool, self.draft_pool, lengths,
+             alive) = self._round_fn(
+                self.params, self.draft_params, tok_d, self.pool,
+                self.draft_pool, len_d, alive_d, seeds_d, self.rng, temp,
+                do_sample=self.do_sample)
+        else:   # sharded round has do_sample baked in (no pjit kwargs)
+            (cand, n_acc, tok, self.pool, self.draft_pool, lengths,
+             alive) = self._round_fn(
+                self.params, self.draft_params, tok_d, self.pool,
+                self.draft_pool, len_d, alive_d, seeds_d, self.rng, temp)
+        cand = np.asarray(jax.block_until_ready(cand))  # the host sync point
+        n_acc = np.asarray(n_acc)
+        self.clock.advance(time.perf_counter() - t0)
+        self.chunks_run += 1
+        self.spec_rounds += 1
+        s.tok = np.array(tok)
+        s.lengths = np.array(lengths)
+        s.alive = np.array(alive)
+        for slot in s.active_slots():
+            n = int(n_acc[slot])
+            self.spec_slot_rounds += 1
+            self.spec_drafted += self.draft_k
+            self.spec_accepted += n - 1
+            if n - 1 < self.draft_k:
+                self.spec_rollbacks += 1
+            if s.accept_chunk(slot, cand[slot, :n], self.eos_id):
+                self._retire(slot)
+
+    # ---- maintenance --------------------------------------------------------
+    def reset(self, clock) -> None:
+        super().reset(clock)
+        self.spec_rounds = self.spec_slot_rounds = 0
+        self.spec_drafted = self.spec_accepted = self.spec_rollbacks = 0
+
+    def snapshot_state(self) -> dict:
+        state = super().snapshot_state()
+        state["kind"] = "speculative"
+        state["draft_k"] = self.draft_k
+        return state
+
+    def summarize(self) -> dict:
+        agg = super().summarize()
+        agg["speculative"] = {
+            "draft_k": self.draft_k,
+            "rounds": self.spec_rounds,
+            "drafted": self.spec_drafted,
+            "accepted": self.spec_accepted,
+            "rollbacks": self.spec_rollbacks,
+            "acceptance_rate": (self.spec_accepted / self.spec_drafted
+                                if self.spec_drafted else 0.0),
+            "mean_accepted_len": (
+                (self.spec_accepted + self.spec_slot_rounds)
+                / self.spec_slot_rounds if self.spec_slot_rounds else 0.0),
+        }
+        return agg

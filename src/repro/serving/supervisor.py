@@ -219,6 +219,19 @@ class ServingSupervisor:
         t0 = time.perf_counter()
         eng._step_chunk()
         if self.metrics is not None:
+            extra = {}
+            prefix = getattr(eng, "prefix", None)
+            if prefix is not None:
+                extra["prefix_hits_full"] = prefix.hits_full
+                extra["prefix_hits_partial"] = prefix.hits_partial
+                extra["prefix_misses"] = prefix.misses
+            if hasattr(eng, "spec_drafted"):   # SpeculativeEngine counters
+                extra["spec_drafted"] = eng.spec_drafted
+                extra["spec_accepted"] = eng.spec_accepted
+                extra["spec_rollbacks"] = eng.spec_rollbacks
+                extra["spec_acceptance_rate"] = (
+                    eng.spec_accepted / eng.spec_drafted
+                    if eng.spec_drafted else 0.0)
             self.metrics.log(
                 eng.chunks_run,
                 queue_depth=len(eng.queue),
@@ -230,7 +243,8 @@ class ServingSupervisor:
                 requeued=eng.requeued,
                 recoveries=self.recoveries,
                 draining=eng.draining,
-                chunk_s=time.perf_counter() - t0)
+                chunk_s=time.perf_counter() - t0,
+                **extra)
 
     # ---- drain snapshot ---------------------------------------------------
     def _flush_snapshot(self) -> None:

@@ -1,0 +1,281 @@
+"""Differential harness for self-speculative decoding.
+
+The contract under test: `SpeculativeEngine` (low-rank draft proposes
+`draft_k` tokens per round, ONE dense multi-token span pass verifies them,
+longest matching prefix accepted) is OBSERVATIONALLY IDENTICAL to the plain
+`PagedEngine` serving the same target params — every request in a seeded
+randomized trace retires with bitwise-equal tokens, greedy AND sampled
+(per-request (seed, position) keys make matching the target's sampled token
+the rejection-sampling acceptance rule). Draft quality only moves the
+acceptance counters, never a token.
+
+On top of parity: the page-pool invariants under speculative OVER-writes
+(rejected positions' K/V land in owned pages and are re-written before any
+read — poisoned freed pages would expose a stale read as token divergence),
+the in-isolation `rollback_slot` primitive (satellite: truncate → pages
+return to the pool → continued decode bitwise-unchanged), the structural
+rejection of ring/mamba templates, the greedy fallback of the token
+selectors at temperature 0 (satellite), and the supervisor's speculation
+counters in the per-chunk metrics JSONL (satellite).
+"""
+
+import functools
+import json
+
+import numpy as np
+import pytest
+from conftest import build_smoke
+from serving_traces import (assert_pool_clean, assert_same_results, make_trace,
+                            run_trace, to_requests)
+
+import jax
+import jax.numpy as jnp
+
+from repro import artifacts
+from repro.serving import PagedEngine, SpeculativeEngine, VirtualClock
+
+MAX_LEN = 64
+PAGE = 8
+
+
+@functools.lru_cache(maxsize=4)
+def _draft_params(arch, ratio=0.5):
+    """One aggressive-ratio draft per arch for the whole module (plain
+    weight-SVD: fast, deterministic, and parity holds for ANY draft)."""
+    cfg, bundle, params = build_smoke(arch)
+    art = artifacts.compress(cfg, params, ratio=ratio, method="plain")
+    _, draft = artifacts.speculative_pair(cfg, params, art)
+    return draft
+
+
+def _engines(arch, *, temperature=0.0, draft_k=3, num_slots=3, eos_id=None,
+             spec_kw=None):
+    """Fresh (plain-paged, speculative) engine pair over the same bundle and
+    the same target params. float32 cache: the parity claim is bitwise."""
+    cfg, bundle, params = build_smoke(arch)
+    base = dict(num_slots=num_slots, max_len=MAX_LEN, chunk=4,
+                cache_dtype=jnp.float32, temperature=temperature,
+                eos_id=eos_id)
+    ref = PagedEngine(bundle, params, clock=VirtualClock(), page_size=PAGE,
+                      prefix_sharing=False, **base)
+    spec = SpeculativeEngine(bundle, params, _draft_params(arch),
+                             draft_k=draft_k, clock=VirtualClock(),
+                             page_size=PAGE, **{**base, **(spec_kw or {})})
+    return cfg, ref, spec
+
+
+# ---- tentpole: differential seeded traces ---------------------------------
+
+@pytest.mark.parametrize("seed,deadline_every", [(0, 0), (1, 5), (2, 0)])
+def test_differential_trace_bitwise_greedy(seed, deadline_every):
+    """Greedy speculative decode is bitwise plain decode on a randomized
+    trace; freed pages are poisoned so a stale-KV read cannot hide."""
+    cfg, ref, spec = _engines("olmo-1b",
+                              spec_kw=dict(poison_freed=True))
+    specs = make_trace(seed, vocab_size=cfg.vocab_size, n_requests=10,
+                       deadline_every=deadline_every)
+    r_ref = run_trace(ref, specs)
+    r_spec = run_trace(spec, specs)
+    assert r_ref, "trace retired nothing — not a meaningful parity check"
+    assert_same_results(r_ref, r_spec, context=f"seed {seed}")
+    assert ref.rejected == spec.rejected
+    sp = spec.summarize()["speculative"]
+    assert sp["drafted"] > 0 and sp["rounds"] == spec.spec_rounds
+    assert sp["accepted"] + sp["rollbacks"] > 0
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert 1.0 <= sp["mean_accepted_len"] <= spec.draft_k + 1
+    assert_pool_clean(spec)
+
+
+def test_differential_trace_bitwise_sampled():
+    """Sampled parity: with per-(seed, position) derandomized sampling,
+    matching the target's sampled token IS the acceptance rule, so even
+    temperature-0.7 streams replay bitwise."""
+    cfg, ref, spec = _engines("olmo-1b", temperature=0.7,
+                              spec_kw=dict(poison_freed=True))
+    specs = make_trace(4, vocab_size=cfg.vocab_size, n_requests=8)
+    r_ref = run_trace(ref, specs)
+    r_spec = run_trace(spec, specs)
+    assert r_ref
+    assert_same_results(r_ref, r_spec, context="sampled")
+    assert_pool_clean(spec)
+
+
+def test_differential_eos_mid_round():
+    """EOS emitted inside a speculative round must clip acceptance exactly
+    where plain decode stops. The eos_id is chosen from tokens the reference
+    actually emits, so the clip provably fires."""
+    cfg, ref0, _ = _engines("olmo-1b")
+    specs = make_trace(2, vocab_size=cfg.vocab_size, n_requests=8)
+    probe = run_trace(ref0, specs)
+    toks = [t for row in probe.values() for t in row]
+    eos = int(np.bincount(toks).argmax())       # most common emitted token
+    cfg, ref, spec = _engines("olmo-1b", eos_id=eos,
+                              spec_kw=dict(poison_freed=True))
+    r_ref = run_trace(ref, specs)
+    r_spec = run_trace(spec, specs)
+    assert any(len(r) < s["max_new_tokens"]
+               for r, s in zip(r_ref.values(), specs)) or any(
+        r[-1] == eos for r in r_ref.values()), "EOS never fired"
+    assert_same_results(r_ref, r_spec, context="eos clip")
+    assert_pool_clean(spec)
+
+
+def test_draft_k_exceeding_chunk():
+    """draft_k > chunk exercises the widened `_slack`: speculative
+    over-writes past a slot's cap stay inside its own page budget."""
+    cfg, ref, spec = _engines("olmo-1b", draft_k=6,
+                              spec_kw=dict(poison_freed=True))
+    assert spec._slack == 6 and ref._slack == 4
+    specs = make_trace(7, vocab_size=cfg.vocab_size, n_requests=6)
+    r_ref = run_trace(ref, specs)
+    r_spec = run_trace(spec, specs)
+    assert r_ref
+    assert_same_results(r_ref, r_spec, context="draft_k=6")
+    assert_pool_clean(spec)
+
+
+def test_zero_recompile_contract():
+    """One round executable and one draft-prefill executable per length
+    bucket across the whole admit/decode/retire churn."""
+    cfg, _, spec = _engines("olmo-1b")
+    specs = make_trace(5, vocab_size=cfg.vocab_size, n_requests=8)
+    run_trace(spec, specs)
+    assert spec._round_fn._cache_size() == 1
+    assert (spec._draft_prefill_len._cache_size()
+            == spec._prefill_len._cache_size())
+    n_round = spec._round_fn._cache_size()
+    spec.reset(VirtualClock())
+    assert spec.spec_drafted == 0 and spec.spec_rounds == 0
+    run_trace(spec, specs)
+    assert spec._round_fn._cache_size() == n_round
+    assert_pool_clean(spec)
+
+
+# ---- structural gating ------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["gemma3-4b", "zamba2-2.7b"])
+def test_ring_and_mamba_templates_rejected(arch):
+    """Sliding-window rings and mamba state are position-recurrent — they
+    cannot hold (or roll back) a multi-position span, so construction fails
+    structurally instead of decoding garbage."""
+    cfg, bundle, params = build_smoke(arch)
+    with pytest.raises(NotImplementedError, match="all-paged"):
+        SpeculativeEngine(bundle, params, _draft_params(arch),
+                          clock=VirtualClock(), num_slots=2, max_len=MAX_LEN,
+                          chunk=4, page_size=PAGE, cache_dtype=jnp.float32)
+
+
+def test_prefix_sharing_rejected():
+    cfg, bundle, params = build_smoke("olmo-1b")
+    with pytest.raises(ValueError, match="prefix sharing"):
+        SpeculativeEngine(bundle, params, _draft_params("olmo-1b"),
+                          clock=VirtualClock(), num_slots=2, max_len=MAX_LEN,
+                          chunk=4, page_size=PAGE, prefix_sharing=True)
+
+
+def test_speculative_pair_shares_and_validates():
+    """The pairing helper: base leaves shared by reference, and a draft
+    built for a different config is refused up front."""
+    cfg, bundle, params = build_smoke("olmo-1b")
+    art = artifacts.compress(cfg, params, ratio=0.5, method="plain")
+    target_params, draft_params = artifacts.speculative_pair(cfg, params, art)
+    assert target_params is params
+    assert draft_params["embed"] is params["embed"]
+    other_cfg, _, _ = build_smoke("gemma3-4b")
+    with pytest.raises(ValueError, match="draft artifact"):
+        artifacts.speculative_pair(other_cfg, params, art)
+
+
+# ---- satellite: rollback primitive in isolation ----------------------------
+
+def test_rollback_slot_releases_and_decodes_bitwise():
+    """Truncate a mid-decode slot's page chain, hand the freed tail back to
+    the pool, re-extend it, and finish: tokens bitwise-identical to an
+    uninterrupted run. Freed pages are poisoned, so any read of the released
+    (then re-allocated) tail before it is re-written would diverge."""
+    cfg, bundle, params = build_smoke("olmo-1b")
+    kw = dict(num_slots=1, max_len=MAX_LEN, chunk=4, page_size=PAGE,
+              cache_dtype=jnp.float32, temperature=0.7,
+              prefix_sharing=False, poison_freed=True)
+    rng = np.random.default_rng(21)
+    spec = [dict(rid=0, prompt=rng.integers(1, cfg.vocab_size, size=10).tolist(),
+                 max_new_tokens=12, seed=77)]
+    ref = PagedEngine(bundle, params, clock=VirtualClock(), **kw)
+    baseline = run_trace(ref, spec)
+
+    eng = PagedEngine(bundle, params, clock=VirtualClock(), **kw)
+    for r in to_requests(spec):
+        eng.submit(r)
+    eng._try_admit()
+    eng._step_chunk()               # decode one chunk, frontier mid-budget
+    slot = 0
+    length = int(eng.slots.lengths[slot])
+    held_before = eng.page_pool.num_held
+    budget = int((eng.table[slot] != 0).sum())
+    released = eng.rollback_slot(slot, length)
+    assert released == budget - (length // PAGE + 1)
+    assert released > 0, "trim released nothing — test not meaningful"
+    eng.page_pool.check()           # refcounts consistent, no double-free
+    assert eng.page_pool.num_held == held_before - released
+    # re-extend: the tail the next chunks will write into comes back from
+    # the (poisoned) free list — re-admission would do exactly this
+    own = eng.page_pool.alloc(released)
+    keep = length // PAGE + 1
+    eng.table[slot, keep:keep + released] = own
+    eng._table_dirty = True
+    while eng.has_work():
+        eng._try_admit()
+        eng._step_chunk()
+    got = {rid: toks.tolist() for rid, (toks, _st) in eng.results.items()}
+    assert_same_results(baseline, got, context="rollback + re-extend")
+    assert_pool_clean(eng)
+
+
+# ---- satellite: selector greedy fallback -----------------------------------
+
+def test_select_token_zero_temperature_is_greedy():
+    """do_sample=True with temperature <= 0 is a DOCUMENTED greedy fallback
+    (the old behavior silently divided by the 1e-6 clamp — near-greedy with
+    float noise deciding ties)."""
+    from repro.models.generate import select_token, select_token_per_slot
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 17))
+    greedy = jnp.argmax(logits, axis=-1)
+    key = jax.random.PRNGKey(1)
+    for t in (0.0, -1.0):
+        np.testing.assert_array_equal(
+            np.asarray(select_token(logits, key, jnp.float32(t), True)),
+            np.asarray(greedy))
+    seeds = jnp.asarray([3, 4, 5], jnp.int32)
+    pos = jnp.asarray([7, 8, 9], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(select_token_per_slot(logits, key, seeds, pos,
+                                         jnp.float32(0.0), True)),
+        np.asarray(greedy))
+    # and a positive temperature still actually samples (differs for at
+    # least one of a batch of keys, else the fallback ate sampling)
+    sampled = select_token_per_slot(logits, key, seeds, pos,
+                                    jnp.float32(5.0), True)
+    assert not np.array_equal(np.asarray(sampled), np.asarray(greedy))
+
+
+# ---- satellite: supervisor metrics ------------------------------------------
+
+def test_supervisor_logs_speculation_counters(tmp_path):
+    from repro.runtime import MetricsLogger
+    from repro.serving import ServingSupervisor
+
+    cfg, _, spec = _engines("olmo-1b")
+    specs = make_trace(6, vocab_size=cfg.vocab_size, n_requests=5)
+    path = tmp_path / "metrics.jsonl"
+    with MetricsLogger(str(path)) as metrics:
+        sup = ServingSupervisor(spec, metrics=metrics)
+        sup.serve(to_requests(specs))
+    records = [json.loads(l) for l in path.read_text().splitlines()]
+    assert records, "supervisor logged no chunk records"
+    last = records[-1]
+    for key in ("spec_drafted", "spec_accepted", "spec_rollbacks",
+                "spec_acceptance_rate"):
+        assert key in last, f"missing {key} in metrics record"
+    assert last["spec_drafted"] == spec.spec_drafted > 0
+    assert 0.0 <= last["spec_acceptance_rate"] <= 1.0
