@@ -42,7 +42,8 @@ def blocksize_sweep(M: int = 256, K: int = 1024, N: int = 512, r: int = 128):
 
     print(f"\n# lowrank tile sweep (interpret mode): M={M} K={K} N={N} r={r}")
     rows = []
-    for bm in (64, 128):
+    bms = (8, 16, 32, 64, 128) if M <= 32 else (64, 128)
+    for bm in bms:
         for bk in (256, 512):
             for bn in (128, 256):
                 y = ops.lowrank_matmul(x, w1, w2, use_pallas=True,
@@ -94,8 +95,12 @@ def main():
     sc = jnp.abs(jax.random.normal(key, (N,))) / 100 + 1e-3
     deq = jax.jit(lambda x, w, s: ops.dequant_matmul(x, w, s, use_pallas=False))
     t = _time(deq, x, wq, sc)
+    # bf16 baseline is 2 bytes/element, int8 1 byte/element → 2× compression
+    mib_bf16 = 2 * K * N / 2**20
+    mib_int8 = K * N / 2**20
     print(f"  dequant int8 matmul        {t:10.1f} µs "
-          f"(weight bytes {K*N/2**20:.0f} MiB→int8 {K*N/2**20:.0f}→{K*N/2**20/2:.0f} eff)")
+          f"(weight bytes bf16 {mib_bf16:.0f} MiB→int8 {mib_int8:.0f} MiB, "
+          f"{mib_bf16/mib_int8:.0f}x)")
     rows.append(("dequant_matmul", t, "int8"))
 
     # derived TPU tiling numbers for the fused kernel (from the BlockSpec)
@@ -107,6 +112,9 @@ def main():
 
     for nm, err, vmem in blocksize_sweep():
         rows.append((nm, 0.0, f"err{err:.1e}/vmem{vmem:.2f}MiB"))
+    # decode-shaped sweep: small bm tiles for num_slots-row activations
+    for nm, err, vmem in blocksize_sweep(M=8, K=1024, N=512, r=128):
+        rows.append((f"decode_{nm}", 0.0, f"err{err:.1e}/vmem{vmem:.2f}MiB"))
 
     print("\nname,us_per_call,derived")
     for nm, t, d in rows:

@@ -28,15 +28,41 @@ def fmt_ms(x: float) -> str:
     return f"{x*1e3:.2f}"
 
 
-def roofline_table(rows: list[dict]) -> str:
+def _mesh_devices(mesh: str) -> int:
+    """'16x16' → 256; unparseable meshes sort last (0 devices)."""
+    try:
+        n = 1
+        for part in mesh.split("x"):
+            n *= int(part)
+        return n
+    except (ValueError, AttributeError):
+        return 0
+
+
+def largest_mesh(rows: list[dict]) -> str | None:
+    """The mesh with the most devices present in the JSONL — the default
+    roofline target, so single-host dryruns (e.g. '1x1') still get a table
+    instead of the silent empty one a hard-coded '16x16' produced."""
+    meshes = {r.get("mesh", "") for r in rows if r.get("mesh")}
+    return max(meshes, key=_mesh_devices) if meshes else None
+
+
+def roofline_table(rows: list[dict], mesh: str | None = None) -> str:
+    if mesh is None:
+        mesh = largest_mesh(rows)
+    filtered = sum(1 for r in rows
+                   if r.get("mesh") != mesh or r.get("compressed"))
     out = [
+        f"(mesh {mesh}: {len(rows) - filtered} row(s); "
+        f"{filtered} filtered — other meshes or compressed runs)",
+        "",
         "| arch | shape | t_compute ms | t_memory ms | t_collective ms | bound "
         "| MODEL_FLOPS | useful | roofline frac |",
         "|---|---|---|---|---|---|---|---|---|",
     ]
     order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
     for r in sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
-        if r.get("mesh") != "16x16" or r.get("compressed"):
+        if r.get("mesh") != mesh or r.get("compressed"):
             continue
         if r["status"] == "SKIP":
             out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
@@ -93,12 +119,16 @@ def summarize(rows: list[dict]) -> str:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--jsonl", default="dryrun_results.jsonl")
+    ap.add_argument("--mesh", default=None,
+                    help="mesh to build the roofline table for (e.g. 16x16); "
+                         "default: the largest mesh present in the JSONL")
     args = ap.parse_args(argv)
     rows = load(args.jsonl)
+    mesh = args.mesh or largest_mesh(rows)
     print("## §Dry-run (memory proof, both meshes)\n")
     print(memory_table(rows))
-    print("\n## §Roofline (single-pod 16×16, per-device terms)\n")
-    print(roofline_table(rows))
+    print(f"\n## §Roofline ({mesh or 'no mesh rows'}, per-device terms)\n")
+    print(roofline_table(rows, mesh))
     print("\n## summary\n")
     print(summarize(rows))
 

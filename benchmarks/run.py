@@ -35,7 +35,7 @@ def main(argv=None):
 
     from benchmarks import t1_truncation, t2_methods, t8_remap, t15_t16_t17, t23_speed
     from benchmarks import (kernels_bench, t24_continuous, t25_artifact,
-                            t26_paged, t27_speculative)
+                            t26_paged, t27_speculative, t28_kernels)
 
     smoke = "--smoke" in argv
     sections = [
@@ -48,6 +48,7 @@ def main(argv=None):
         ("t25_artifact", lambda: t25_artifact.main(smoke=smoke)),
         ("t26_paged", lambda: t26_paged.main(smoke=smoke)),
         ("t27_speculative", lambda: t27_speculative.main(smoke=smoke)),
+        ("t28_kernels", lambda: t28_kernels.main(smoke=smoke)),
         ("kernels", kernels_bench.main),
     ]
 

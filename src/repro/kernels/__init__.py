@@ -1,3 +1,36 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels + dispatch for the serving hot path.
+
+`ops` holds the public wrappers (padding, dispatch, batching); `config` the
+process-wide use_pallas/interpret/tile-table state; `flash_decode` the
+online-softmax decode-attention kernels. See docs/kernels.md.
+"""
+
+from repro.kernels.config import (
+    DECODE_M_MAX,
+    DEFAULT_TILES,
+    KernelConfig,
+    TileTable,
+    get_kernel_config,
+    install_tile_table,
+    kernel_config,
+    resolve_dispatch,
+    resolve_tiles,
+    set_kernel_config,
+)
+from repro.kernels.ops import dequant_matmul, lowrank_matmul, quant_lowrank_matmul
+
+__all__ = [
+    "DECODE_M_MAX",
+    "DEFAULT_TILES",
+    "KernelConfig",
+    "TileTable",
+    "dequant_matmul",
+    "get_kernel_config",
+    "install_tile_table",
+    "kernel_config",
+    "lowrank_matmul",
+    "quant_lowrank_matmul",
+    "resolve_dispatch",
+    "resolve_tiles",
+    "set_kernel_config",
+]

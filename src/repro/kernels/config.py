@@ -1,0 +1,200 @@
+"""Process-wide kernel dispatch configuration + the tuned tile table.
+
+Three decisions used to be made ad hoc at every call site, each with its own
+default, and could silently disagree between the nested calls of one fused
+forward:
+
+  * use_pallas  — run the Pallas kernel (TPU, or interpret mode anywhere)
+                  or the pure-jnp reference path;
+  * interpret   — run pl.pallas_call under the interpreter (the CPU
+                  validation mode) or compile for the accelerator;
+  * tiles       — the bm/bk/bn block sizes for each kernel.
+
+This module centralizes them. `resolve_dispatch` is the ONE place the
+(use_pallas, interpret) pair is decided, so a multi-kernel composition (e.g.
+the remapped-storage forward, which chains two dequant matmuls) resolves once
+at its top and threads literal booleans down — nested calls can no longer
+re-derive a different answer mid-forward.
+
+Tiles come from a `TileTable`: a (kernel, m-class, dtype) → (bm, bk, bn)
+mapping produced by the roofline tuner (roofline/tuner.py), persisted as
+JSON, and optionally carried inside a CompressionArtifact's `extra` dict so
+serving an artifact installs its tuned tiles before anything traces
+(`install_tile_table`). Lookups fall back dtype → m-class → the hand-chosen
+defaults below, so a partial table is always safe.
+
+Everything here is read at TRACE time: `set_kernel_config` before building an
+engine bakes the dispatch and tiles into the compiled executables — there is
+no per-step branching and no recompile after the first trace.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+from dataclasses import dataclass, field
+
+import jax
+
+# M at or below this is a decode-shaped activation (num_slots rows, not a
+# sequence): small-bm tiles, no 128-row padding.
+DECODE_M_MAX = 32
+
+# Hand-chosen fallback tiles, keyed "kernel/m_class". The tuner's measured
+# table overrides these per dtype; these are the documented seeds (and what
+# the "tuned >= defaults" CI assertion compares against).
+DEFAULT_TILES: dict[str, tuple[int, int, int]] = {
+    "lowrank/prefill": (128, 512, 256),
+    "lowrank/decode": (16, 512, 256),
+    "dequant/prefill": (128, 256, 256),
+    "dequant/decode": (16, 256, 256),
+    "quant_lowrank/prefill": (128, 256, 256),
+    "quant_lowrank/decode": (16, 256, 256),
+}
+
+
+def m_class(m: int) -> str:
+    return "decode" if m <= DECODE_M_MAX else "prefill"
+
+
+@dataclass
+class TileTable:
+    """(kernel, m-class, dtype) → (bm, bk, bn), with graceful fallback.
+
+    `entries` keys are "kernel/m_class/dtype" (most specific) or
+    "kernel/m_class"; `meta` records tuner provenance (backend, measured
+    peaks, sweep shapes) so a table names the machine it was tuned on.
+    """
+
+    entries: dict[str, tuple[int, int, int]] = field(default_factory=dict)
+    meta: dict = field(default_factory=dict)
+
+    def lookup(self, kernel: str, m: int, dtype) -> tuple[int, int, int] | None:
+        cls = m_class(m)
+        for key in (f"{kernel}/{cls}/{jax.numpy.dtype(dtype).name}",
+                    f"{kernel}/{cls}"):
+            if key in self.entries:
+                return tuple(self.entries[key])
+        return None
+
+    def to_json(self) -> dict:
+        return {"entries": {k: list(v) for k, v in sorted(self.entries.items())},
+                "meta": self.meta}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "TileTable":
+        return cls(entries={k: tuple(v) for k, v in obj.get("entries", {}).items()},
+                   meta=dict(obj.get("meta", {})))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TileTable":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+
+@dataclass
+class KernelConfig:
+    """Process-wide dispatch defaults; any per-call kwarg still wins."""
+
+    use_pallas: bool | None = None   # None → TPU backend only
+    interpret: bool | None = None    # None → interpret iff not on TPU
+    tile_table: TileTable | None = None
+
+
+_lock = threading.Lock()
+_config = KernelConfig()
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def get_kernel_config() -> KernelConfig:
+    return _config
+
+
+def set_kernel_config(*, use_pallas: bool | None = None,
+                      interpret: bool | None = None,
+                      tile_table: TileTable | None = None) -> KernelConfig:
+    """Install process-wide dispatch defaults (serve.py's --use-pallas /
+    --pallas-interpret / --tile-table land here, BEFORE any engine traces).
+    Only the kwargs passed are replaced."""
+    global _config
+    with _lock:
+        _config = dataclasses.replace(
+            _config,
+            **{k: v for k, v in dict(use_pallas=use_pallas,
+                                     interpret=interpret,
+                                     tile_table=tile_table).items()
+               if v is not None})
+    return _config
+
+
+@contextlib.contextmanager
+def kernel_config(**kw):
+    """Scoped `set_kernel_config` — tests pin dispatch without leaking it."""
+    global _config
+    with _lock:
+        prev = _config
+        _config = dataclasses.replace(prev, **kw)
+    try:
+        yield _config
+    finally:
+        with _lock:
+            _config = prev
+
+
+def install_tile_table(table: TileTable | dict | str | None) -> TileTable | None:
+    """Accept a TileTable, its JSON dict form (an artifact's
+    extra["tile_table"]), or a path; install it process-wide. None is a
+    no-op so callers can thread `artifact.extra.get("tile_table")` blindly."""
+    if table is None:
+        return None
+    if isinstance(table, str):
+        table = TileTable.load(table)
+    elif isinstance(table, dict):
+        table = TileTable.from_json(table)
+    set_kernel_config(tile_table=table)
+    return table
+
+
+def resolve_dispatch(use_pallas: bool | None,
+                     interpret: bool | None) -> tuple[bool, bool]:
+    """The single resolution point for the (use_pallas, interpret) pair.
+
+    Per-call kwargs win; unset values fall to the process config; unset
+    config falls to the backend (Pallas compiled on TPU, reference path —
+    and, if forced, interpret mode — elsewhere). Returns literal booleans so
+    composed kernels thread ONE decision through every nested call.
+    """
+    cfg = _config
+    if use_pallas is None:
+        use_pallas = cfg.use_pallas
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if interpret is None:
+        interpret = cfg.interpret
+    if interpret is None:
+        interpret = not _on_tpu()
+    return bool(use_pallas), bool(interpret)
+
+
+def resolve_tiles(kernel: str, m: int, dtype,
+                  bm: int | None = None, bk: int | None = None,
+                  bn: int | None = None) -> tuple[int, int, int]:
+    """Tile choice for `kernel` at an (M-class, dtype): explicit kwargs win
+    per component, then the installed tuned table, then DEFAULT_TILES."""
+    table = _config.tile_table
+    picked = table.lookup(kernel, m, dtype) if table is not None else None
+    if picked is None:
+        picked = DEFAULT_TILES[f"{kernel}/{m_class(m)}"]
+    return (bm if bm is not None else picked[0],
+            bk if bk is not None else picked[1],
+            bn if bn is not None else picked[2])

@@ -1,0 +1,279 @@
+"""Flash-style online-softmax decode attention Pallas TPU kernels.
+
+Three kernels over the same inner loop, one per KV layout the serving stack
+decodes against:
+
+  * `flash_decode`        — contiguous (B, S, KVH, D) cache, single query
+                            per row (the whole-slot / ring engines);
+  * `flash_span_decode`   — contiguous cache, Sq queries per row with a
+                            per-query causal end (the speculative verify
+                            span pass);
+  * `flash_decode_paged`  — the paged KV pool (P, page_size, KVH, D),
+                            gathered inside the kernel through the page
+                            table via scalar prefetch — the HBM view is
+                            never materialized slot-contiguously.
+
+All three are GQA-grouped: the query arrives pre-scaled and pre-reshaped as
+(B, KVH, G, D) — G query heads share one KV head — so K/V blocks are read
+once in their native dtype and never repeated G×. Scores and the softmax
+run in f32. Masking matches models/layers.py exactly: invalid positions get
+-1e30 (not -inf), so a fully-masked row degrades to the same uniform
+distribution as the reference einsum path.
+
+The online-softmax state (running max m, normalizer l, weighted accumulator
+acc) lives in VMEM scratch across the sequential KV-block grid axis; m/l are
+kept lane-broadcast at (rows, 128) — the canonical TPU idiom — and the
+output is emitted as acc/l at the last KV block. When the whole sequence
+fits one KV block (every smoke/test cache), the kernel statically switches
+to an EXACT body — softmax normalized before the value dot, the reference
+op order — so decode tokens cannot drift from the einsum path on small
+caches.
+
+Wrappers in models/layers.py own dispatch (kernels.config), padding, and
+the (B, 1, H, D) ↔ (B, KVH, G, D) reshapes; nothing here is called by the
+serving stack directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # matches models/layers.py masking, NOT -inf (see module doc)
+
+
+def _online_update(sc, v_blk, acc_ref, m_ref, l_ref):
+    """One flash step: fold a masked score block (rows, bs) and its value
+    block (bs, D) into the running (m, l, acc) state."""
+    m_prev = m_ref[:, :1]                                   # (rows, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(sc, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(sc - m_cur)                                 # (rows, bs)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_blk, preferred_element_type=jnp.float32)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, bs: int, ns: int, window: int, exact: bool,
+                   lengths_ref=None):
+    """Grid (B, KVH, ns); KV blocks sequential (last axis fastest)."""
+    b, s = pl.program_id(0), pl.program_id(2)
+    q = q_ref[0, 0]                                         # (G, D) f32
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bs, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (G, bs)
+
+    length = lengths_ref[b]
+    pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+    valid = pos < length
+    if window > 0:
+        valid &= pos >= length - window
+    sc = jnp.where(valid, sc, NEG_INF)
+
+    if exact:  # ns == 1: reference op order — normalize p BEFORE the dot
+        m = jnp.max(sc, axis=-1, keepdims=True)
+        p = jnp.exp(sc - m)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0, 0] = jnp.dot(
+            p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+        return
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _online_update(sc, v, acc_ref, m_ref, l_ref)
+
+    @pl.when(s == ns - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[:, :1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "window", "interpret", "out_dtype"))
+def flash_decode(
+    q: jnp.ndarray,         # (B, KVH, G, D) f32, pre-scaled by 1/sqrt(D)
+    k_cache: jnp.ndarray,   # (B, S, KVH, D) native dtype, S % bs == 0
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,   # (B,) int32 valid-count per row
+    *,
+    bs: int,
+    window: int = 0,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:           # (B, KVH, G, D)
+    b, s, kvh, d = k_cache.shape
+    g = q.shape[2]
+    assert q.shape == (b, kvh, g, d), (q.shape, k_cache.shape)
+    assert s % bs == 0, (s, bs)
+    ns = s // bs
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, h, j, L: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, j, L: (i, j, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, j, L: (i, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, j, L: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+
+    def kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l):
+        _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l,
+                       bs=bs, ns=ns, window=window, exact=(ns == 1),
+                       lengths_ref=lengths_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (b, kvh, g, d), out_dtype or q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+
+
+def _span_kernel(g: int):
+    """Per-query causal end: flattened row r = qi·G + gq sits at absolute
+    position lengths[b] + qi and sees cache entries < lengths[b] + qi + 1."""
+
+    def masked_scores(sc, b, s, bs, lengths_ref):
+        length = lengths_ref[b]
+        pos = s * bs + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, sc.shape, 0) // g
+        return jnp.where(pos < length + qi + 1, sc, NEG_INF)
+
+    return masked_scores
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "g", "interpret", "out_dtype"))
+def flash_span_decode(
+    q: jnp.ndarray,         # (B, KVH, Sq*G, D) f32, pre-scaled; rows qi-major
+    k_cache: jnp.ndarray,   # (B, S, KVH, D), S % bs == 0
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,   # (B,) int32
+    *,
+    g: int,                 # GQA group size (rows per query position)
+    bs: int,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:           # (B, KVH, Sq*G, D)
+    b, s, kvh, d = k_cache.shape
+    rows = q.shape[2]
+    assert q.shape == (b, kvh, rows, d) and rows % g == 0, (q.shape, g)
+    assert s % bs == 0, (s, bs)
+    ns = s // bs
+    mask_fn = _span_kernel(g)
+
+    def kernel(lengths_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l):
+        bi, si = pl.program_id(0), pl.program_id(2)
+        qrows = q_ref[0, 0]                                  # (rows, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        sc = jnp.dot(qrows, k.T, preferred_element_type=jnp.float32)
+        sc = mask_fn(sc, bi, si, bs, lengths_ref)
+
+        if ns == 1:
+            mx = jnp.max(sc, axis=-1, keepdims=True)
+            p = jnp.exp(sc - mx)
+            p = p / jnp.sum(p, axis=-1, keepdims=True)
+            o_ref[0, 0] = jnp.dot(
+                p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+            return
+
+        @pl.when(si == 0)
+        def _init():
+            m[...] = jnp.full_like(m, NEG_INF)
+            l[...] = jnp.zeros_like(l)
+            acc[...] = jnp.zeros_like(acc)
+
+        _online_update(sc, v, acc, m, l)
+
+        @pl.when(si == ns - 1)
+        def _emit():
+            o_ref[0, 0] = (acc[...] / l[:, :1]).astype(o_ref.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), lambda i, h, j, L: (i, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, j, L: (i, j, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda i, h, j, L: (i, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, rows, d), lambda i, h, j, L: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rows, d), out_dtype or q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+def flash_decode_paged(
+    q: jnp.ndarray,         # (B, KVH, G, D) f32, pre-scaled
+    k_pool: jnp.ndarray,    # (P, page_size, KVH, D) — one layer's pool leaf
+    v_pool: jnp.ndarray,
+    table: jnp.ndarray,     # (B, pages_per_slot) int32 physical page ids
+    lengths: jnp.ndarray,   # (B,) int32
+    *,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jnp.ndarray:           # (B, KVH, G, D)
+    """Paged decode attention: the KV block for grid step (b, h, j) is
+    fetched straight from physical page table[b, j] via the scalar-prefetch
+    index map — no slot-contiguous gather ever hits HBM. Dead slots point
+    every table row at null page 0; their positions all fail `pos < length`
+    so they get exactly the reference's uniform-over--1e30 behavior."""
+    P, ps, kvh, d = k_pool.shape
+    b, npp = table.shape
+    g = q.shape[2]
+    assert q.shape == (b, kvh, g, d), (q.shape, k_pool.shape)
+    ns = npp
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, h, j, T, L: (i, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), lambda i, h, j, T, L: (T[i, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, d), lambda i, h, j, T, L: (T[i, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, h, j, T, L: (i, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+        ],
+    )
+
+    def kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref, acc, m, l):
+        _decode_kernel(q_ref, k_ref, v_ref, o_ref, acc, m, l,
+                       bs=ps, ns=ns, window=0, exact=(ns == 1),
+                       lengths_ref=lengths_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), out_dtype or q.dtype),
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -16,10 +16,16 @@ Index maps clamp into the valid range during the opposite phase (those loads
 are dead). The y output block for row-block i has a constant index during
 phase 1, so it is flushed only after phase 2 writes it.
 
-VMEM working set (bm=128, bk=512, bn=256, R≤4096, bf16 in / fp32 acc):
+VMEM working set at the prefill defaults (bm=128, bk=512, bn=256, R≤4096,
+bf16 in / fp32 acc):
   x tile 128·512·2 = 128 KiB, W1 tile 512·R·2 ≤ 4 MiB, W2 tile R·256·2 ≤ 2 MiB,
   acc 128·R·4 ≤ 2 MiB, y tile 128 KiB — ≈ 8 MiB ≪ 16 MiB v5e VMEM.
 All tile dims are multiples of (8, 128) for MXU/VREG alignment.
+
+Actual tiles are resolved per call by config.resolve_tiles: decode-shaped M
+gets bm=16 from DEFAULT_TILES, and a roofline-tuned TileTable
+(roofline/tuner.py — same VMEM model as above, used as a feasibility filter)
+overrides either default when installed. docs/kernels.md has the full loop.
 """
 
 from __future__ import annotations

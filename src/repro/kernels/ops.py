@@ -5,23 +5,30 @@ path runs on TPU (or anywhere under `interpret=True` for validation); the
 pure-jnp reference path is the default on CPU so tests/benchmarks stay fast,
 (c) batched inputs (leading dims folded into M).
 
+Dispatch and tiles both come from `repro.kernels.config`: the
+(use_pallas, interpret) pair is resolved EXACTLY ONCE at the top of each
+wrapper via `config.resolve_dispatch` and threaded down as literal booleans —
+a composed forward (e.g. the remapped-storage path, which chains multiple
+kernels) can no longer re-derive a different answer per nested call. Tile
+sizes default to `config.resolve_tiles`, which consults the installed
+roofline-tuned TileTable and falls back to the documented defaults; decode-
+shaped activations (M ≤ config.DECODE_M_MAX) get small-bm tiles instead of
+being padded 16–128× up to the prefill bm=128.
+
 The serving stack calls these, never pl.pallas_call directly.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import config as kcfg
 from repro.kernels import ref as ref_lib
 from repro.kernels.dequant_matmul import dequant_matmul as _dequant_pallas
 from repro.kernels.lowrank_matmul import lowrank_matmul as _lowrank_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.quant_lowrank_matmul import (
+    quant_lowrank_matmul_fused as _quant_lowrank_fused,
+)
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
@@ -46,26 +53,23 @@ def lowrank_matmul(
     *,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
-    bm: int = 128,
-    bk: int = 512,
-    bn: int = 256,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
 ) -> jnp.ndarray:
     """y = (x @ W1) @ W2 with any number of leading batch dims on x."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
     if not use_pallas:
         return ref_lib.lowrank_matmul_ref(x, w1, w2)
 
     x2, lead = _fold_batch(x)
     m, k = x2.shape
     r, n = w2.shape
+    bm, bk, bn = kcfg.resolve_tiles("lowrank", m, x.dtype, bm, bk, bn)
     xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
     w1p = _pad_to(_pad_to(w1, bk, 0), 128, 1)
     w2p = _pad_to(_pad_to(w2, 128, 0), bn, 1)
-    yp = _lowrank_pallas(
-        xp, w1p, w2p, bm=bm, bk=bk, bn=bn,
-        interpret=bool(interpret) if interpret is not None else not _on_tpu(),
-    )
+    yp = _lowrank_pallas(xp, w1p, w2p, bm=bm, bk=bk, bn=bn, interpret=interpret)
     return yp[:m, :n].reshape(*lead, n)
 
 
@@ -77,13 +81,12 @@ def dequant_matmul(
     scale_axis: str = "n",
     use_pallas: bool | None = None,
     interpret: bool | None = None,
-    bm: int = 128,
-    bk: int = 256,
-    bn: int = 256,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
 ) -> jnp.ndarray:
     """y = x @ (wq · scale); wq int8 (K, N)."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
     if not use_pallas:
         if scale_axis == "n":
             return ref_lib.dequant_matmul_ref(x, wq, scale)
@@ -93,39 +96,23 @@ def dequant_matmul(
     x2, lead = _fold_batch(x)
     m, k = x2.shape
     n = wq.shape[1]
+    bm, bk, bn = kcfg.resolve_tiles("dequant", m, x.dtype, bm, bk, bn)
     xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
     wqp = _pad_to(_pad_to(wq, bk, 0), bn, 1)
     sp = _pad_to(scale, bn if scale_axis == "n" else bk, 0)
     yp = _dequant_pallas(
         xp, wqp, sp, scale_axis=scale_axis, bm=bm, bk=bk, bn=bn,
-        interpret=bool(interpret) if interpret is not None else not _on_tpu(),
+        interpret=interpret,
     )
     return yp[:m, :n].reshape(*lead, n)
 
 
-def quant_lowrank_matmul(
-    x: jnp.ndarray,
-    u8: jnp.ndarray,
-    tail: jnp.ndarray,
-    v8: jnp.ndarray,
-    su: jnp.ndarray,
-    sv: jnp.ndarray,
-    *,
-    use_pallas: bool | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """Full remapped-storage forward (Algorithm 3), both orientations:
+def _quant_lowrank_composed(x, u8, tail, v8, su, sv, *, interpret):
+    """Prefill-shaped remapped forward: two dequant kernels + jnp tail ops.
 
-      tall (m > n):  t = x[:, :d]@(u8·su) + x[:, d:]@tail ;  y = (t·sv) @ v8ᵀ
-      wide (m < n):  t = x@(u8·su) ; y = [(t·sv) @ v8ᵀ , t @ tailᵀ]
-
-    Composes the dequant kernel so the weight path stays int8 end-to-end.
+    `interpret` is already a literal boolean here — resolved once by the
+    caller, the same value for both nested kernels.
     """
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if not use_pallas:
-        return ref_lib.quant_lowrank_matmul_ref(x, u8, tail, v8, su, sv)
-
     d = u8.shape[0]
     m = x.shape[-1]
     t = dequant_matmul(
@@ -143,3 +130,94 @@ def quant_lowrank_matmul(
         y_hi = t.astype(jnp.float32) @ jnp.swapaxes(tail, 0, 1).astype(jnp.float32)
         y = jnp.concatenate([y, y_hi.astype(y.dtype)], axis=-1)
     return y.astype(x.dtype)
+
+
+def _quant_lowrank_decode(x, u8, tail, v8, su, sv, *, interpret,
+                          bm, bk, bn):
+    """Decode-shaped remapped forward: ONE fused Pallas call.
+
+    Splits x into the int8-row columns (xq) and the tall-tail columns (xt),
+    transposes v8/tail onto the output side, zero-pads every region to block
+    multiples with the dormant orientation's region exactly one zero block
+    (so all four kernel phases statically exist), and slices the real output
+    columns back out.
+    """
+    d, r = u8.shape
+    x2, lead = _fold_batch(x)
+    mrows = x2.shape[0]
+    m_in = x2.shape[1]
+    tall = m_in > d
+    tw = tail.shape[0]  # tail extent: extra K cols (tall) or extra N cols (wide)
+
+    rp = -(-max(r, 1) // 128) * 128
+    pad_r = rp - r
+
+    xq = _pad_to(_pad_to(x2[:, :d], bm, 0), bk, 1)
+    u8p = _pad_to(_pad_to(u8, bk, 0), rp, 1)
+    sup = jnp.pad(su.astype(jnp.float32).reshape(1, -1), ((0, 0), (0, pad_r)))
+    svp = jnp.pad(sv.astype(jnp.float32).reshape(1, -1), ((0, 0), (0, pad_r)))
+
+    mp = xq.shape[0]
+    if tall and tw:
+        xt = _pad_to(_pad_to(x2[:, d:], bm, 0), bk, 1)
+        tk = _pad_to(_pad_to(tail, bk, 0), rp, 1)
+    else:
+        xt = jnp.zeros((mp, bk), x2.dtype)
+        tk = jnp.zeros((bk, rp), tail.dtype)
+
+    v8t = _pad_to(_pad_to(jnp.swapaxes(v8, 0, 1), rp, 0), bn, 1)
+    if (not tall) and tw:
+        tn = _pad_to(_pad_to(jnp.swapaxes(tail, 0, 1), rp, 0), bn, 1)
+    else:
+        tn = jnp.zeros((rp, bn), tail.dtype)
+
+    yp = _quant_lowrank_fused(
+        xq, u8p, sup, xt, tk, v8t, svp, tn,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+    nv = v8.shape[0]
+    y = yp[:mrows, :nv]
+    if (not tall) and tw:
+        y = jnp.concatenate([y, yp[:mrows, v8t.shape[1]:v8t.shape[1] + tw]],
+                            axis=-1)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def quant_lowrank_matmul(
+    x: jnp.ndarray,
+    u8: jnp.ndarray,
+    tail: jnp.ndarray,
+    v8: jnp.ndarray,
+    su: jnp.ndarray,
+    sv: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+) -> jnp.ndarray:
+    """Full remapped-storage forward (Algorithm 3), both orientations:
+
+      tall (m > n):  t = x[:, :d]@(u8·su) + x[:, d:]@tail ;  y = (t·sv) @ v8ᵀ
+      wide (m < n):  t = x@(u8·su) ; y = [(t·sv) @ v8ᵀ , t @ tailᵀ]
+
+    The weight path stays int8 end-to-end. Decode-shaped activations
+    (folded M ≤ config.DECODE_M_MAX) run as a single fused Pallas kernel
+    holding the rank intermediate in VMEM; larger M composes the dequant
+    kernel twice. Dispatch is resolved ONCE here and threaded down.
+    """
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
+    if not use_pallas:
+        return ref_lib.quant_lowrank_matmul_ref(x, u8, tail, v8, su, sv)
+
+    mrows = 1
+    for s in x.shape[:-1]:
+        mrows *= s
+    if mrows <= kcfg.DECODE_M_MAX:
+        bm, bk, bn = kcfg.resolve_tiles(
+            "quant_lowrank", mrows, x.dtype, bm, bk, bn)
+        return _quant_lowrank_decode(
+            x, u8, tail, v8, su, sv, interpret=interpret, bm=bm, bk=bk, bn=bn)
+    return _quant_lowrank_composed(
+        x, u8, tail, v8, su, sv, interpret=interpret)

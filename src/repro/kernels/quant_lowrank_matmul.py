@@ -1,0 +1,138 @@
+"""Fused remapped-storage (Algorithm 3) matmul Pallas TPU kernel.
+
+The deployable mixed-precision form of a Dobi-SVD matrix is four weight
+regions — int8 ŨΣ rows (`u8`), a bf16 tail on the taller factor, int8 V rows
+(`v8`), and per-rank scales su/sv. The composed serving path runs them as two
+dequant kernels plus jnp tail matmuls, which round-trips the (M, R) rank
+intermediate through HBM twice; at decode shapes (M = num_slots) the
+intermediate is tiny and the round-trips plus the per-kernel M-padding
+dominate. This kernel runs the whole forward in ONE pallas_call, keeping the
+rank intermediate in a VMEM accumulator and the weight path int8 end-to-end.
+
+Four-phase sequential grid (TPU grids iterate the last axis fastest):
+
+    grid = (M/bm, nkq + nkt + nnv + nnt)
+
+    phase A (j < nkq):             acc += xq[i,j] @ (u8[j] · su)   (int8 dequant)
+    phase B (next nkt):            acc += xt[i,j] @ tk[j]          (bf16 tall tail)
+    phase C (next nnv):            y[i,j] = (acc · sv) @ v8ᵀ[j]    (int8 dequant)
+    phase D (last nnt):            y[i,j] = acc @ tnᵀ[j]           (bf16 wide tail)
+
+Both orientations are the same kernel: a tall matrix has its tail on the
+contraction side (phase B live, phase D a zero block), a wide one on the
+output side (phase B zero, phase D live). ops.py zero-pads the dormant
+region to exactly one block, so every phase always exists and index maps
+just clamp — dead loads, never dead grid axes.
+
+VMEM working set (bm=16, bk=256, bn=256, R ≤ 4096):
+  xq/xt tiles 16·256·4 = 16 KiB ×2, u8 tile 256·R ≤ 1 MiB, tk tile ≤ 2 MiB,
+  v8ᵀ tile R·256 ≤ 1 MiB, tnᵀ tile ≤ 2 MiB, acc 16·R·4 ≤ 0.25 MiB,
+  scales 2·R·4 ≤ 32 KiB — ≈ 6.3 MiB ≪ 16 MiB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xq_ref, u8_ref, su_ref, xt_ref, tk_ref, v8t_ref, sv_ref, tn_ref,
+            y_ref, acc_ref, *, nkq: int, nkt: int, nnv: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < nkq)
+    def _phase_a():
+        w = u8_ref[...].astype(jnp.float32) * su_ref[...]
+        acc_ref[...] += jnp.dot(
+            xq_ref[...].astype(jnp.float32), w,
+            preferred_element_type=jnp.float32)
+
+    @pl.when((j >= nkq) & (j < nkq + nkt))
+    def _phase_b():
+        acc_ref[...] += jnp.dot(
+            xt_ref[...].astype(jnp.float32), tk_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((j >= nkq + nkt) & (j < nkq + nkt + nnv))
+    def _phase_c():
+        t = acc_ref[...] * sv_ref[...]
+        y_ref[...] = jnp.dot(
+            t, v8t_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    @pl.when(j >= nkq + nkt + nnv)
+    def _phase_d():
+        y_ref[...] = jnp.dot(
+            acc_ref[...], tn_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bk", "bn", "interpret")
+)
+def quant_lowrank_matmul_fused(
+    xq: jnp.ndarray,      # (M, Kq)      activation cols hitting the int8 rows
+    u8: jnp.ndarray,      # (Kq, R) int8
+    su: jnp.ndarray,      # (1, R)  f32
+    xt: jnp.ndarray,      # (M, Kt)      activation cols hitting the tall tail
+    tk: jnp.ndarray,      # (Kt, R)      tall-tail factor (zeros when wide)
+    v8t: jnp.ndarray,     # (R, Nv) int8 — v8ᵀ
+    sv: jnp.ndarray,      # (1, R)  f32
+    tn: jnp.ndarray,      # (R, Nt)      wide-tail columns ᵀ (zeros when tall)
+    *,
+    bm: int = 16,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """y = [(xq @ (u8·su) + xt @ tk) · sv] @ v8ᵀ ‖ (…) @ tnᵀ → (M, Nv + Nt).
+
+    Shapes must be pre-padded to block multiples with every region at least
+    one block wide (ops.py does this); R is kept whole in VMEM, multiple of
+    128.
+    """
+    m, kq = xq.shape
+    kt = xt.shape[1]
+    r = u8.shape[1]
+    nv, nt = v8t.shape[1], tn.shape[1]
+    assert u8.shape == (kq, r) and tk.shape == (kt, r), (u8.shape, tk.shape)
+    assert v8t.shape[0] == r and tn.shape[0] == r, (v8t.shape, tn.shape)
+    assert su.shape == (1, r) and sv.shape == (1, r), (su.shape, sv.shape)
+    assert (m % bm == 0 and kq % bk == 0 and kt % bk == 0
+            and nv % bn == 0 and nt % bn == 0), (m, kq, kt, nv, nt, bm, bk, bn)
+
+    nkq, nkt = kq // bk, kt // bk
+    nnv, nnt = nv // bn, nt // bn
+    grid = (m // bm, nkq + nkt + nnv + nnt)
+
+    def clamp(lo, j, n):
+        return jnp.clip(j - lo, 0, n - 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nkq=nkq, nkt=nkt, nnv=nnv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, clamp(0, j, nkq))),
+            pl.BlockSpec((bk, r), lambda i, j: (clamp(0, j, nkq), 0)),
+            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j: (i, clamp(nkq, j, nkt))),
+            pl.BlockSpec((bk, r), lambda i, j: (clamp(nkq, j, nkt), 0)),
+            pl.BlockSpec((r, bn), lambda i, j: (0, clamp(nkq + nkt, j, nnv))),
+            pl.BlockSpec((1, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r, bn),
+                         lambda i, j: (0, clamp(nkq + nkt + nnv, j, nnt))),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bn), lambda i, j: (i, clamp(nkq + nkt, j, nnv + nnt))),
+        out_shape=jax.ShapeDtypeStruct((m, nv + nt), xq.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, r), jnp.float32)],
+        interpret=interpret,
+    )(xq, u8, su, xt, tk, v8t, sv, tn)

@@ -361,6 +361,18 @@ def main(argv=None):
                          "model=TP) device mesh — params TP over 'model', "
                          "KV slots over 'data' (docs/parallel.md); tokens "
                          "identical to the single-device run")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the serving hot path through the Pallas "
+                         "kernels (fused low-rank/dequant matmuls + flash "
+                         "decode attention); off-TPU this requires "
+                         "--pallas-interpret")
+    ap.add_argument("--pallas-interpret", action="store_true",
+                    help="run the Pallas kernels under the interpreter "
+                         "(CPU validation mode — slow, for parity checks)")
+    ap.add_argument("--tile-table", default=None, metavar="PATH",
+                    help="install a roofline-tuned tile table JSON "
+                         "(roofline/tuner.py --out); an --artifact with an "
+                         "attached table installs it automatically")
     ap.add_argument("--set", action="append", default=[])
     args = ap.parse_args(argv)
 
@@ -397,6 +409,20 @@ def main(argv=None):
             ap.error(f"--base-params {args.base_params}: no committed checkpoint")
         print(f"[serve] base params from {args.base_params} (step {step})")
         return ckpt.restore(step, bundle.param_specs())
+
+    # kernel dispatch is process-wide, read at trace time: set it BEFORE any
+    # engine builds so every compile bakes in the chosen path/tiles
+    if args.use_pallas or args.pallas_interpret or args.tile_table:
+        from repro.kernels import install_tile_table, set_kernel_config
+        set_kernel_config(
+            use_pallas=True if args.use_pallas else None,
+            interpret=True if args.pallas_interpret else None)
+        if args.tile_table:
+            install_tile_table(args.tile_table)
+            print(f"[serve] tile table installed from {args.tile_table}")
+        if args.use_pallas:
+            print("[serve] Pallas kernel dispatch ON"
+                  + (" (interpret)" if args.pallas_interpret else ""))
 
     mesh = None
     if args.mesh is not None:
@@ -437,6 +463,11 @@ def main(argv=None):
                     f"{len(issues)} integrity issue(s) ignored "
                     f"(--allow-degraded): " + "; ".join(issues[:3]),
                     RuntimeWarning)
+        if art.extra.get("tile_table") and not args.tile_table:
+            from repro.kernels import install_tile_table
+            install_tile_table(art.extra["tile_table"])
+            print(f"[serve] roofline-tuned tile table from artifact "
+                  f"({art.extra['tile_table'].get('meta', {}).get('backend', '?')}-tuned)")
         cfg = art.config
         if args.set:
             cfg = parse_overrides(cfg, args.set)

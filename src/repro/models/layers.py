@@ -22,6 +22,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import config as kcfg
+from repro.kernels import flash_decode as kflash
 from repro.kernels import ops as kops
 
 Param = Any  # array or dict-of-arrays
@@ -241,6 +243,30 @@ def blockwise_attention(
     return jnp.concatenate(outs, axis=1)
 
 
+def _lengths_vec(length, b: int) -> jnp.ndarray:
+    """Scalar-or-(B,) valid count → (B,) int32."""
+    return jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (b,))
+
+
+def _kv_blocked(k_cache, v_cache):
+    """Pick the flash KV block size; pad S up to a multiple if needed.
+
+    Small caches stay one block (the kernel's EXACT body — reference softmax
+    op order); larger ones stream 512-position blocks through the online
+    softmax. Zero padding is masked off by `pos < length`.
+    """
+    s = k_cache.shape[1]
+    if s <= 512:
+        return k_cache, v_cache, s
+    pad = (-s) % 512
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    return k_cache, v_cache, 512
+
+
 def decode_attention(
     q: jnp.ndarray,           # (B, 1, H, D)
     k_cache: jnp.ndarray,     # (B, S, KVH, D)
@@ -248,6 +274,8 @@ def decode_attention(
     length: jnp.ndarray | int,  # valid cache length: scalar, or (B,) per-row
     *,
     window: int = 0,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Single-token decode attention against a (possibly padded) KV cache.
 
@@ -259,8 +287,22 @@ def decode_attention(
     upcast (a §Perf iteration: the expand-then-f32 form dominated decode HBM
     traffic). The sequence-parallel (sharded-S) variant with distributed
     softmax lives in parallel/collectives.py.
+
+    Dispatch follows kernels.config, same switches as the matmul wrappers:
+    `use_pallas` routes to the flash-decode online-softmax kernel
+    (kernels/flash_decode.py), otherwise the einsum path below runs.
     """
     b, s, kvh, d = k_cache.shape
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
+    if use_pallas:
+        h = q.shape[2]
+        g = h // kvh
+        qg = (q.astype(jnp.float32) * (1.0 / math.sqrt(d))).reshape(b, kvh, g, d)
+        kp, vp, bs = _kv_blocked(k_cache, v_cache)
+        out = kflash.flash_decode(
+            qg, kp, vp, _lengths_vec(length, b),
+            bs=bs, window=window, interpret=interpret, out_dtype=q.dtype)
+        return out.reshape(b, 1, h, d)
     h = q.shape[2]
     groups = h // kvh
     scale = 1.0 / math.sqrt(d)
@@ -285,6 +327,9 @@ def span_decode_attention(
     k_cache: jnp.ndarray,     # (B, Skv, KVH, D)
     v_cache: jnp.ndarray,
     lengths: jnp.ndarray,     # (B,) — row i's query j sits at lengths[i] + j
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """Multi-token decode attention: S queries per row against one KV cache.
 
@@ -303,6 +348,17 @@ def span_decode_attention(
     sq, h = q.shape[1], q.shape[2]
     groups = h // kvh
     scale = 1.0 / math.sqrt(d)
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
+    if use_pallas:
+        # rows qi-major: flattened row qi*G + g ↔ (query position, group)
+        qrows = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, groups, d)
+        qrows = qrows.transpose(0, 2, 1, 3, 4).reshape(b, kvh, sq * groups, d)
+        kp, vp, bs = _kv_blocked(k_cache, v_cache)
+        out = kflash.flash_span_decode(
+            qrows, kp, vp, lengths.astype(jnp.int32),
+            g=groups, bs=bs, interpret=interpret, out_dtype=q.dtype)
+        out = out.reshape(b, kvh, sq, groups, d).transpose(0, 2, 1, 3, 4)
+        return out.reshape(b, sq, h, d)
     qg = (q.astype(jnp.float32) * scale).reshape(b, sq, kvh, groups, d)
     # scores: (B, KVH, G, Sq, S)
     sc = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
@@ -315,6 +371,46 @@ def span_decode_attention(
     out = jnp.einsum("bhgqs,bshd->bqhgd", p, v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,           # (B, 1, H, D)
+    k_pool: jnp.ndarray,      # (P, page_size, KVH, D) — one layer's pool leaf
+    v_pool: jnp.ndarray,
+    table: jnp.ndarray,       # (B, pages_per_slot) int32 physical page ids
+    length: jnp.ndarray | int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Single-token decode attention straight over the paged KV pool.
+
+    The reference path materializes the slot-contiguous (B, max_len, KVH, D)
+    gather (exactly transformer.paged_read) and runs `decode_attention`'s
+    einsum — byte-for-byte the whole-slot computation. The Pallas path skips
+    the gather entirely: `flash_decode_paged` fetches each page through the
+    table with a scalar-prefetch index map, so HBM traffic is one read of
+    the live pages instead of gather-out + attention-in.
+    """
+    b = table.shape[0]
+    ps = k_pool.shape[1]
+    use_pallas, interpret = kcfg.resolve_dispatch(use_pallas, interpret)
+    if use_pallas:
+        kvh, d = k_pool.shape[2], k_pool.shape[3]
+        h = q.shape[2]
+        g = h // kvh
+        qg = (q.astype(jnp.float32) * (1.0 / math.sqrt(d))).reshape(b, kvh, g, d)
+        out = kflash.flash_decode_paged(
+            qg, k_pool, v_pool, table, _lengths_vec(length, b),
+            interpret=interpret, out_dtype=q.dtype)
+        return out.reshape(b, 1, h, d)
+
+    npp = table.shape[1]
+    flat = table.reshape(-1)
+    layer_k = k_pool[flat].reshape((b, npp * ps) + k_pool.shape[2:])
+    layer_v = v_pool[flat].reshape((b, npp * ps) + v_pool.shape[2:])
+    return decode_attention(q, layer_k, layer_v, length,
+                            use_pallas=False, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

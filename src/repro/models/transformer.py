@@ -297,9 +297,12 @@ def decode_attention_layer(
         vec_len = length if length.ndim else jnp.full((b,), length, jnp.int32)
         new_k = paged_write_slot(cache.k, k, idx, pages, vec_len, page_size)
         new_v = paged_write_slot(cache.v, v, idx, pages, vec_len, page_size)
-        layer_k = paged_read(new_k, idx, pages)
-        layer_v = paged_read(new_v, idx, pages)
-        out = L.decode_attention(q, layer_k, layer_v, vec_len + 1)
+        # attention reads the pool through the table: the einsum path gathers
+        # the slot-contiguous view (paged_read), the Pallas path fetches pages
+        # in-kernel via scalar prefetch — dispatch decided in layers/config
+        out = L.paged_decode_attention(
+            q, read_stack_slice(new_k, idx), read_stack_slice(new_v, idx),
+            pages, vec_len + 1)
         return L.apply_linear(p["wo"], out.reshape(b, 1, -1)), KVCache(new_k, new_v)
 
     s_cache = cache.k.shape[len(idx) + 1]

@@ -2,3 +2,7 @@ from repro.roofline.hlo import (
     collective_bytes_from_text, roofline_terms, model_flops,
     param_count, active_param_count,
 )
+from repro.roofline.tuner import (
+    Peaks, attach_to_artifact, build_tile_table, measure_peaks,
+    predict_time, reference_peaks, tune_kernel,
+)

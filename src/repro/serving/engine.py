@@ -280,12 +280,18 @@ class ContinuousEngine:
         max_len, chunk, …)."""
         import os
         from repro.artifacts import CompressionArtifact, load_artifact
+        from repro.kernels import install_tile_table
         from repro.models import build
         if isinstance(artifact, (str, os.PathLike)):
             artifact = load_artifact(os.fspath(artifact), mesh=mesh)
         if not isinstance(artifact, CompressionArtifact):
             raise TypeError(f"expected CompressionArtifact or path, got "
                             f"{type(artifact).__name__}")
+        # a roofline-tuned tile table attached to the artifact (see
+        # roofline/tuner.py --attach) is installed BEFORE anything traces,
+        # so the engine compiles once with tuned bm/bk/bn — no per-step
+        # re-specialization
+        install_tile_table(artifact.extra.get("tile_table"))
         bundle = build(artifact.config)
         servable = bundle.with_artifact(artifact, params, rng=rng, mesh=mesh)
         return cls(bundle, servable, mesh=mesh, **engine_kw)
